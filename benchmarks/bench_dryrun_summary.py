@@ -1,0 +1,31 @@
+"""Multi-pod dry-run summary: per-cell compile status, per-device
+memory, and collective inventory from experiments/dryrun/."""
+import json
+import pathlib
+import time
+
+DRY = pathlib.Path("experiments/dryrun")
+
+
+def run():
+    rows = []
+    if not DRY.exists():
+        return [{"name": "dryrun/missing", "us_per_call": 0,
+                 "derived": "run: python -m repro.launch.dryrun --all"}]
+    for f in sorted(DRY.glob("*.json")):
+        t0 = time.time()
+        r = json.loads(f.read_text())
+        m = r.get("memory", {})
+        colls = r.get("collectives", {})
+        cstr = ",".join(f"{k}:{v['count']}" for k, v in
+                        sorted(colls.items()))
+        rows.append({
+            "name": f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": (
+                f"status={r['status']};"
+                f"args_gb={m.get('argument_bytes', 0)/1e9:.2f};"
+                f"temp_gb={m.get('temp_bytes', 0)/1e9:.2f};"
+                f"collectives={cstr or 'none'}"),
+        })
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Fig. 3: theoretical roofline per configuration — compute
+ceiling shared with the Fast baseline, SPM-bandwidth boundary shifting
+with core count."""
+import time
+
+from repro.configs.multivic_paper import EVAL_CONFIGS
+from repro.core.roofline import attainable_gflops, config_roofline
+
+
+def run():
+    rows = []
+    for hw in EVAL_CONFIGS:
+        t0 = time.time()
+        r = config_roofline(hw)
+        # attainable perf at the matmul benchmark's arithmetic intensity
+        # (~2 FLOPs per 8 bytes from SPM for fp32 dot products)
+        ai = 0.25
+        att = attainable_gflops(hw, ai)
+        rows.append({
+            "name": f"fig3/{hw.name}",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": (
+                f"peak_gflops={r['peak_gflops']:.2f};"
+                f"spm_bw_gbs={r['spm_bw_gbs']:.2f};"
+                f"dram_bw_gbs={r['dram_bw_gbs']:.2f};"
+                f"ridge_spm={r['ridge_spm']:.2f};"
+                f"attainable@0.25={att:.2f}"),
+        })
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Fig. 4: the matmul benchmark executed 100x per configuration —
+median execution cycles and standard deviation, plus the paper anchors.
+"""
+import time
+
+from repro.configs.multivic_paper import (EVAL_CONFIGS,
+                                          PAPER_MEDIAN_CYCLES,
+                                          PAPER_SECONDS)
+from repro.core.scheduler import MatmulProblem, build_matmul_schedule
+from repro.core.simulator import run_many
+from repro.core.wcet import wcet
+
+
+def run(n_runs: int = 100):
+    rows = []
+    for hw in EVAL_CONFIGS:
+        t0 = time.time()
+        sched = build_matmul_schedule(hw, MatmulProblem())
+        stats = run_many(sched, hw, n_runs=n_runs)
+        bound = wcet(sched, hw)
+        secs = stats["median"] / hw.fmax_hz
+        target = PAPER_MEDIAN_CYCLES.get(hw.name)
+        err = (stats["median"] / target - 1) if target else None
+        rows.append({
+            "name": f"fig4/{hw.name}",
+            "us_per_call": (time.time() - t0) * 1e6 / n_runs,
+            "derived": (
+                f"median_cycles={stats['median']:.0f};std={stats['std']:.0f};"
+                f"sec@fmax={secs:.3f};wcet={bound:.0f}"
+                + (f";paper={target};err={err:+.4%}" if target else "")
+                + (f";paper_sec={PAPER_SECONDS[hw.name]}"
+                   if hw.name in PAPER_SECONDS else "")),
+        })
+    return rows

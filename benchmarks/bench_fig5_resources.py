@@ -1,0 +1,30 @@
+"""Paper Fig. 5: FPGA resource utilization — per-variant totals and the
+dual-core per-component breakdown."""
+import time
+
+from repro.configs.multivic_paper import DUAL, EVAL_CONFIGS
+from repro.core.resources import component_resources, total_resources
+
+
+def run():
+    rows = []
+    for hw in EVAL_CONFIGS:
+        t0 = time.time()
+        t = total_resources(hw)
+        rows.append({
+            "name": f"fig5a/{hw.name}",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": (f"lut={t['lut']:.0f};ff={t['ff']:.0f};"
+                        f"bram={t['bram']:.0f};dsp={t['dsp']:.0f}"),
+        })
+    t0 = time.time()
+    comps = component_resources(DUAL)
+    dt = (time.time() - t0) * 1e6
+    for cname, c in comps.items():
+        rows.append({
+            "name": f"fig5b/dual/{cname}",
+            "us_per_call": dt / len(comps),
+            "derived": (f"lut={c['lut']:.0f};ff={c['ff']:.0f};"
+                        f"bram={c['bram']:.0f};dsp={c['dsp']:.0f}"),
+        })
+    return rows

@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks: interpret-mode CPU timing (correctness
+path) + the TPU-target analytic time from the static-schedule WCET
+model (what the BlockSpec schedule promises on the real part)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tpu_mapping import (tpu_matmul_schedule, tpu_steady_state,
+                                    tpu_wcet)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # spm_matmul
+    from repro.kernels.spm_matmul.ops import matmul
+    m = k = n = 512
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = jax.random.normal(key, (k, n), jnp.float32)
+    us = _time(lambda x, y: matmul(x, y, bm=256, bn=256), a, b)
+    sched = tpu_matmul_schedule(m, k, n, tile_m=256, tile_n=256,
+                                elem_bytes=4)
+    rows.append({
+        "name": "kernel/spm_matmul_512",
+        "us_per_call": us,
+        "derived": (f"tpu_wcet_us={tpu_wcet(sched)*1e6:.2f};"
+                    f"tpu_steady_us={tpu_steady_state(sched)*1e6:.2f};"
+                    f"interpret=True"),
+    })
+
+    # flash attention
+    from repro.kernels.flash_attention.ops import attention
+    B, S, H, KV, D = 1, 256, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    kk = jax.random.normal(key, (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, KV, D), jnp.float32)
+    us = _time(lambda *xs: attention(*xs, bq=128, bk=128), q, kk, v)
+    flops = 4 * B * H * S * S * D / 2          # causal
+    rows.append({
+        "name": "kernel/flash_attn_256",
+        "us_per_call": us,
+        "derived": (f"tpu_compute_us={flops/197e12*1e6:.3f};"
+                    f"interpret=True"),
+    })
+
+    # wkv6
+    from repro.kernels.wkv6.ops import wkv
+    B, S, H, K = 1, 256, 2, 64
+    r = jax.random.normal(key, (B, S, H, K)) * 0.5
+    kx = jax.random.normal(key, (B, S, H, K)) * 0.5
+    vx = jax.random.normal(key, (B, S, H, K)) * 0.5
+    w = -jnp.exp(jax.random.normal(key, (B, S, H, K)) * 0.5 - 2)
+    u = jax.random.normal(key, (H, K)) * 0.3
+    us = _time(lambda *xs: wkv(*xs, chunk=64), r, kx, vx, w, u)
+    chunk_flops = B * H * (S / 64) * (64 * 64 * K * 3 + 64 * K * K * 2)
+    rows.append({
+        "name": "kernel/wkv6_256",
+        "us_per_call": us,
+        "derived": (f"tpu_compute_us={chunk_flops/197e12*1e6:.4f};"
+                    f"interpret=True"),
+    })
+    return rows

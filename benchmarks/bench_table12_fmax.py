@@ -1,0 +1,26 @@
+"""Paper Tables 1-2: configuration variants and maximum achievable
+clock frequencies — measured (published) vs our fitted critical-path /
+routing-congestion model."""
+import time
+
+from repro.configs.multivic_paper import PAPER_CONFIGS
+from repro.core.fmax import model_table
+
+
+def run():
+    rows = []
+    t0 = time.time()
+    table = model_table()
+    dt = (time.time() - t0) * 1e6 / max(1, len(table))
+    for (name, meas, pred, err), hw in zip(table, PAPER_CONFIGS):
+        rows.append({
+            "name": f"table12/{name}",
+            "us_per_call": dt,
+            "derived": (
+                f"workers={hw.num_worker_cores};vreg={hw.vicuna.vreg_bits};"
+                f"mul={hw.vicuna.mul_width_bits};"
+                f"spm_kib={hw.data_spm_bytes // 1024};"
+                f"fmax_meas={meas:.0f}MHz;fmax_model={pred:.1f}MHz;"
+                f"err={err:+.2%}"),
+        })
+    return rows

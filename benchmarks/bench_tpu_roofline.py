@@ -1,0 +1,34 @@
+"""TPU roofline per (arch x shape): reads the dry-run + roofline sweep
+artifacts (experiments/) and reports the three terms, dominant
+bottleneck, and the MODEL_FLOPS ratio for every cell (EXPERIMENTS.md
+§Roofline is generated from the same records)."""
+import json
+import pathlib
+import time
+
+ROOF = pathlib.Path("experiments/roofline")
+
+
+def run():
+    rows = []
+    if not ROOF.exists():
+        return [{"name": "tpu_roofline/missing", "us_per_call": 0,
+                 "derived": "run: python -m repro.launch.roofline_run --all"}]
+    for f in sorted(ROOF.glob("*.json")):
+        t0 = time.time()
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        t = r["terms"]
+        rows.append({
+            "name": f"tpu_roofline/{r['arch']}/{r['shape']}",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": (
+                f"compute_s={t['compute_s']:.4f};"
+                f"memory_s={t['memory_s']:.4f};"
+                f"collective_s={t['collective_s']:.4f};"
+                f"dominant={t['dominant']};"
+                f"roofline_frac={t['roofline_fraction']:.3f};"
+                f"useful_flops_ratio={r['useful_ratio']:.3f}"),
+        })
+    return rows

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure plus the
+TPU-side roofline/dry-run reports.  Prints ``name,us_per_call,derived``
+CSV (assignment format).
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer Fig.4 simulation runs")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_beyond_paper, bench_dryrun_summary,
+                            bench_fig3_roofline, bench_fig4_matmul,
+                            bench_fig5_resources, bench_kernels,
+                            bench_table12_fmax, bench_tpu_roofline)
+
+    rows = []
+    rows += bench_table12_fmax.run()
+    rows += bench_fig3_roofline.run()
+    rows += bench_fig4_matmul.run(n_runs=10 if args.fast else 100)
+    rows += bench_fig5_resources.run()
+    rows += bench_kernels.run()
+    rows += bench_beyond_paper.run()
+    rows += bench_tpu_roofline.run()
+    rows += bench_dryrun_summary.run()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.2f},\"{r['derived']}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving with time-predictability reporting — the paper's
+Fig. 4 protocol applied to LM decode: run the same static step many
+times, report median / sigma / jitter, and compare with the WCET bound
+from the static-schedule model.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-1.6b
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve  # noqa: E402  (reuses the launcher)
+
+if __name__ == "__main__":
+    sys.argv.setdefault if False else None
+    serve.main()

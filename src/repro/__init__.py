@@ -1,0 +1,10 @@
+"""repro: MultiVic-on-TPU — a statically-scheduled, interference-free
+multi-worker JAX training/inference framework reproducing
+
+  "MultiVic: A Time-Predictable RISC-V Multi-Core Processor Optimized
+   for Neural Network Inference" (Kirschner et al., 2025)
+
+See DESIGN.md for the paper -> TPU mapping.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,68 @@
+"""Analytic parameter / FLOP model.
+
+MODEL_FLOPS follows the assignment: 6*N*D for training (N = active
+params, D = tokens), 2*N*D for inference forward passes.  For MoE, N
+counts each token's routed experts (top_k + shared), not the full
+expert pool.  Used for the §Roofline "useful compute" ratio against the
+compiled HLO FLOPs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _tree_param_count(cfg: ModelConfig, skip_prefix: Tuple[str, ...] = ()):
+    from repro.models import lm as lm_mod
+    from repro.models.spec import is_par
+    import jax
+
+    spec = lm_mod.model_spec(cfg)
+    total = 0
+    expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(
+        spec, is_leaf=is_par)[0]
+    for path, p in flat:
+        n = int(np.prod(p.shape, dtype=np.int64))
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        total += n
+        if "/we_" in keys or keys.startswith("we_"):
+            expert += n
+    return total, expert
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total parameters (embeddings included)."""
+    total, _ = _tree_param_count(cfg)
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token: full experts replaced by top_k-worth."""
+    total, expert = _tree_param_count(cfg)
+    if cfg.moe is None or expert == 0:
+        return total
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    return int(total - expert + expert * frac)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global MODEL_FLOPS for one step of this cell."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "encdec":
+            tokens = shape.global_batch * max(
+                256, shape.seq_len // cfg.encdec.dec_len_ratio)
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "encdec":
+            tokens = shape.global_batch * max(
+                256, shape.seq_len // cfg.encdec.dec_len_ratio)
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,93 @@
+"""HLO-text analysis: collective-op inventory with byte counts.
+
+cost_analysis() does not report collective traffic, so we parse the
+compiled (post-SPMD-partitioner) HLO and sum the result-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.  Ops inside ``while`` bodies appear once in the
+text; the roofline composer multiplies per-unit pieces by their trip
+counts (see analysis/pieces.py), mirroring the paper's compositional
+timing analysis.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+import numpy as np
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# e.g.:  %all-reduce.1 = bf16[8,128]{1,0} all-reduce(...)
+#        ROOT %x = (f32[2], f32[2]) all-to-all(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|"
+    r"collective-permute)\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d],
+                            dtype=np.int64))
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """-> {kind: {count, bytes}} summed over every appearance."""
+    stats = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += shape_bytes(shape_str)
+    return {k: dict(v) for k, v in stats.items()}
+
+
+def total_collective_bytes(stats: Dict) -> int:
+    return int(sum(v["bytes"] for v in stats.values()))
+
+
+def summarize_compiled(compiled) -> Dict:
+    """Extract a JSON-able record from a compiled executable."""
+    rec = {}
+    try:
+        ca = compiled.cost_analysis() or {}
+        rec["flops"] = float(ca.get("flops", 0.0))
+        rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        rec["transcendentals"] = float(ca.get("transcendentals", 0.0))
+    except Exception as e:  # pragma: no cover
+        rec["cost_error"] = repr(e)
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory_error"] = repr(e)
+    try:
+        txt = compiled.as_text()
+        rec["collectives"] = collective_stats(txt)
+        rec["collective_bytes"] = total_collective_bytes(rec["collectives"])
+    except Exception as e:  # pragma: no cover
+        rec["collective_error"] = repr(e)
+    return rec

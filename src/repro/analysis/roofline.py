@@ -1,0 +1,50 @@
+"""Three-term roofline analysis per (arch x shape x mesh).
+
+Hardware constants (assignment-specified, TPU v5e-class):
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+``cost_analysis``/HLO numbers from a jitted SPMD program are PER-DEVICE
+(verified empirically), so:
+    compute term    = flops_per_device / peak
+    memory term     = bytes_per_device / hbm_bw
+    collective term = collective_bytes_per_device / link_bw
+which equal the assignment's global/(chips*bw) forms.  The collective
+term conservatively assumes a single ICI link is utilized per chip.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float,
+                   coll_bytes_dev: float) -> Dict[str, float]:
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_bytes_dev / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = terms[dominant]
+    terms.update({
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": bound,
+        # fraction of the bound that is useful compute — the roofline
+        # fraction we hillclimb (1.0 = perfectly compute-bound)
+        "roofline_fraction": compute_s / bound if bound > 0 else 0.0,
+    })
+    return terms
+
+
+def compose_pieces(piece_records) -> Dict[str, float]:
+    """Sum (cost x multiplier) over piece records from the runner."""
+    tot = {"flops": 0.0, "bytes_accessed": 0.0, "collective_bytes": 0.0}
+    for rec in piece_records:
+        m = rec["multiplier"]
+        tot["flops"] += m * rec.get("flops", 0.0)
+        tot["bytes_accessed"] += m * rec.get("bytes_accessed", 0.0)
+        tot["collective_bytes"] += m * rec.get("collective_bytes", 0.0)
+    return tot

@@ -1,0 +1,134 @@
+"""Checkpointing for fault-tolerant training (no orbax dependency).
+
+Guarantees:
+  * atomicity: a checkpoint directory is written under a tmp name and
+    os.rename'd into place — a crash mid-save never corrupts `latest`,
+  * async: saves run on a background thread from host copies so the
+    train loop isn't blocked (`save(..., blocking=False)`),
+  * re-mesh restore: arrays are stored UNSHARDED per leaf (gathered to
+    host); restore applies whatever shardings the new mesh prescribes,
+    so an elastic restart on a different device count just works,
+  * retention: keep_n newest checkpoints are retained.
+
+Layout:  <dir>/step_<N>/  { manifest.json, arr_<i>.npy ... }
+         <dir>/latest     (text file with the step number)
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _bits_dtype(dt: np.dtype) -> np.dtype:
+    return {1: np.uint8, 2: np.uint16, 4: np.uint32,
+            8: np.uint64}[dt.itemsize]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_n = keep_n
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        self.wait()               # never overlap two writers (same dir)
+        host_tree = jax.tree.map(lambda a: np.asarray(a), tree)
+        if blocking:
+            self._write(step, host_tree)
+            return
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any) -> None:
+        leaves, treedef = jax.tree.flatten(host_tree)
+        final = self.dir / f"step_{step}"
+        tmp = self.dir / f".tmp_step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "treedef": str(treedef),
+                    "n_leaves": len(leaves),
+                    "dtypes": [str(l.dtype) for l in leaves]}
+        for i, leaf in enumerate(leaves):
+            # ml_dtypes (bfloat16 etc.) don't survive np.save; store the
+            # raw bits as a same-width integer view, dtype in manifest.
+            if leaf.dtype.kind not in "fiub":
+                leaf = leaf.view(_bits_dtype(leaf.dtype))
+            elif str(leaf.dtype) == "bfloat16":
+                leaf = leaf.view(np.uint16)
+            np.save(tmp / f"arr_{i}.npy", leaf, allow_pickle=False)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)                       # atomic publish
+        (self.dir / ".latest_tmp").write_text(str(step))
+        os.rename(self.dir / ".latest_tmp", self.dir / "latest")
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+
+    def all_steps(self):
+        return [int(p.name.split("_")[1])
+                for p in self.dir.glob("step_*") if p.is_dir()]
+
+    def latest_step(self) -> Optional[int]:
+        f = self.dir / "latest"
+        if not f.exists():
+            steps = self.all_steps()
+            return max(steps) if steps else None
+        step = int(f.read_text().strip())
+        return step if (self.dir / f"step_{step}").is_dir() else None
+
+    def restore(self, like_tree: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of like_tree; if `shardings` (a
+        matching tree of NamedShardings) is given, device_put each leaf
+        accordingly — this is the elastic re-mesh path."""
+        step = step if step is not None else self.latest_step()
+        assert step is not None, "no checkpoint found"
+        d = self.dir / f"step_{step}"
+        leaves_like, treedef = jax.tree.flatten(like_tree)
+        manifest = json.loads((d / "manifest.json").read_text())
+        assert manifest["n_leaves"] == len(leaves_like), (
+            f"checkpoint has {manifest['n_leaves']} leaves, model needs "
+            f"{len(leaves_like)}")
+        out = []
+        shard_leaves = (jax.tree.flatten(shardings)[0]
+                        if shardings is not None else [None] *
+                        len(leaves_like))
+        dtypes = manifest.get("dtypes")
+        for i, (like, sh) in enumerate(zip(leaves_like, shard_leaves)):
+            arr = np.load(d / f"arr_{i}.npy")
+            if dtypes and str(arr.dtype) != dtypes[i]:
+                import ml_dtypes
+                arr = arr.view(np.dtype(dtypes[i]) if dtypes[i] in
+                               np.sctypeDict else
+                               getattr(ml_dtypes, dtypes[i]))
+            assert arr.shape == tuple(like.shape), (
+                i, arr.shape, like.shape)
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr, dtype=like.dtype))
+        return jax.tree.unflatten(treedef, out), step

@@ -1,0 +1,19 @@
+"""deepseek-67b [dense]: 95L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=102400 — llama-style architecture.  [arXiv:2401.02954; hf]
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    num_layers=95,
+    d_model=8192,
+    d_ff=22016,
+    vocab_size=102_400,
+    attention=AttentionConfig(
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+    ),
+    activation="swiglu",
+))

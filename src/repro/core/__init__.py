@@ -1,0 +1,25 @@
+"""The paper's primary contribution, as a composable library:
+
+  schedule.py   static-schedule IR + interference-freedom validation
+  scheduler.py  compile-time blocked-matmul scheduler (paper §4.3)
+  timing.py     calibrated cycle-accurate phase timing model
+  simulator.py  discrete-event executor with seeded DDR4 jitter
+  wcet.py       compositional WCET bounds (paper §3.1)
+  roofline.py   paper Fig. 3 roofline model
+  fmax.py       F_max model fitted to Tables 1-2
+  resources.py  FPGA resource model (Fig. 5)
+  tpu_mapping.py the MultiVic execution model on the TPU target
+"""
+from repro.core.schedule import DMA, Phase, Schedule, core_resource
+from repro.core.scheduler import (MatmulProblem, build_matmul_schedule,
+                                  schedule_totals, spm_plan)
+from repro.core.simulator import SimResult, run_many, simulate
+from repro.core.timing import DEFAULT_TIMING, TimingParams
+from repro.core.wcet import jitter_bound, wcet, wcet_closed_form
+
+__all__ = [
+    "DMA", "Phase", "Schedule", "core_resource", "MatmulProblem",
+    "build_matmul_schedule", "schedule_totals", "spm_plan", "SimResult",
+    "run_many", "simulate", "DEFAULT_TIMING", "TimingParams",
+    "jitter_bound", "wcet", "wcet_closed_form",
+]

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, SyntheticLMDataset,
+                                 make_train_iterator)
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "make_train_iterator"]

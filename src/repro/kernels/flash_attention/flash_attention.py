@@ -1,0 +1,120 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+MultiVic mapping: the online-softmax tiles are the scratchpad-resident
+working set; K/V tiles stream through VMEM on the compiler-generated
+(static) DMA schedule; the (m, l, acc) running statistics live in VMEM
+scratch across the innermost (kv) grid dimension — TPU grids execute
+sequentially per core, so scratch carries state exactly like a worker
+core's accumulator registers.
+
+Supports causal masking and a sliding window (gemma3's local layers)
+via position iota; GQA is handled by folding the q-head group into the
+batch-like leading grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            nk: int):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                          # [bq, D]
+    k = k_ref[0]                          # [bk, D]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # [bq, bk]
+
+    q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    k_pos = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kv_i == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: float = 0.0, bq: int = 256, bk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B,Sq,H,D]; k,v: [B,Sk,KV,D] -> [B,Sq,H,D].
+
+    The (batch, kv_head, q_group) triple folds into the first grid
+    axis; q blocks are the second; kv blocks stream innermost."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale or float(1.0 / np.sqrt(D))
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+
+    # fold: q -> [B*KV*G, Sq, D]; k/v -> [B*KV, Sk, D]
+    qf = jnp.moveaxis(q.reshape(B, Sq, KV, G, D), 1, 3) \
+        .reshape(B * KV * G, Sq, D)
+    kf = jnp.moveaxis(k, 1, 2).reshape(B * KV, Sk, D)
+    vf = jnp.moveaxis(v, 1, 2).reshape(B * KV, Sk, D)
+
+    nq, nk = Sq // bq, Sk // bk
+    grid = (B * KV * G, nq, nk)
+
+    of = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j, g=G: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j, g=G: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV * G, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    o = of.reshape(B, KV, G, Sq, D)
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, D)

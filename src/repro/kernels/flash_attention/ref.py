@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (causal + sliding window GQA)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale=None):
+    """q: [B,Sq,H,D]; k,v: [B,Sk,KV,D]; GQA via head grouping."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale or 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32) * scale
+    pos_q = jnp.arange(Sq)[:, None]
+    pos_k = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= pos_k <= pos_q
+    if window > 0:
+        ok &= (pos_q - pos_k) < window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, D)

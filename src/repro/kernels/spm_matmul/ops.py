@@ -1,0 +1,43 @@
+"""jit'd public wrapper for spm_matmul with VMEM-plan checking.
+
+The block plan is validated against the same scratchpad-capacity logic
+the paper core uses (core.tpu_mapping) — the BlockSpec IS the static
+DMA schedule, so an infeasible plan is a scheduling bug, not a runtime
+surprise.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.tpu_mapping import V5E, TPUChip
+from repro.kernels.spm_matmul.spm_matmul import spm_matmul
+
+
+def vmem_plan(m: int, k: int, n: int, bm: int, bn: int, bk: int = 0,
+              elem_bytes: int = 2, chip: TPUChip = V5E) -> dict:
+    kk = k if bk <= 0 else bk
+    # A tile + B block + C tile, double-buffered A/C
+    need = (2 * bm * kk + kk * bn + 2 * bm * bn) * elem_bytes
+    return {"vmem_need": need, "vmem_bytes": chip.vmem_bytes,
+            "fits": need <= chip.vmem_bytes}
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 0,
+           interpret=None):
+    """Public entry point.  interpret=None auto-selects interpret mode
+    off-TPU (CPU validation; see EXAMPLE.md)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    plan = vmem_plan(a.shape[0], a.shape[1], b.shape[1], bm, bn, bk,
+                     a.dtype.itemsize)
+    if not plan["fits"]:
+        if bk <= 0:
+            bk = 512
+        while not vmem_plan(a.shape[0], a.shape[1], b.shape[1], bm, bn,
+                            bk, a.dtype.itemsize)["fits"] and bk > 128:
+            bk //= 2
+    return spm_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)

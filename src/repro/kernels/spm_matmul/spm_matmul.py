@@ -1,0 +1,93 @@
+"""spm_matmul: the paper's matmul benchmark (§4.3) as a TPU Pallas
+kernel — the MultiVic dataflow translated to the TPU memory hierarchy.
+
+Paper -> TPU mapping:
+  B column block resident in a core's scratchpad  -> B tile pinned in
+      VMEM for a whole output-column sweep (B-stationary grid order),
+  A rows streamed by the management core's DMA    -> A tiles streamed
+      HBM->VMEM by the Pallas grid pipeline (double-buffered by the
+      compiler — the *static schedule* is the BlockSpec index maps),
+  C fragments written back                        -> C tiles to HBM.
+
+Two paths:
+  * K fits VMEM (the paper's regime): 2D grid (j, i), i innermost —
+    each B block [K, bn] is fetched once and reused for every A tile.
+  * large K: 3D grid (j, i, k) with an fp32 VMEM accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel_2d(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def _kernel_3d(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
+                                             "interpret"))
+def spm_matmul(a: jax.Array, b: jax.Array, *, bm: int = 256,
+               bn: int = 256, bk: int = 0,
+               interpret: bool = False) -> jax.Array:
+    """C = A @ B with B-stationary VMEM blocking.
+
+    a: [M, K], b: [K, N].  bk == 0 keeps the full K resident (the
+    paper's scratchpad-resident B block)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn = min(bm, m), min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+
+    if bk <= 0 or bk >= k:
+        grid = (n // bn, m // bm)      # i (A tiles) innermost
+        return pl.pallas_call(
+            _kernel_2d,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, k), lambda j, i: (i, 0)),
+                pl.BlockSpec((k, bn), lambda j, i: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary")),
+            interpret=interpret,
+        )(a, b)
+
+    assert k % bk == 0, (k, bk)
+    nk = k // bk
+    grid = (n // bn, m // bm, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel_3d, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda j, i, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda j, i, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,25 @@
+"""Oracle for the WKV6 kernel: exact sequential recurrence (fp32).
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+"""
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w_log, u, init_state=None):
+    """r,k,v,w_log: [B,S,H,K]; u: [H,K] -> (y [B,S,H,K], S [B,H,K,K])."""
+    B, S, H, K = r.shape
+    s0 = (jnp.zeros((B, H, K, K), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(S_, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S_ + u[None, :, :, None] * kv)
+        return jnp.exp(wt)[..., None] * S_ + kv, y
+
+    seq = lambda a: jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+    final, ys = jax.lax.scan(step, s0, (seq(r), seq(k), seq(v),
+                                        seq(w_log)))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), final

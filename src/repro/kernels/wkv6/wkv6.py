@@ -1,0 +1,122 @@
+"""WKV6 (RWKV-6 linear attention with data-dependent per-channel decay)
+as a chunked Pallas TPU kernel.
+
+MultiVic mapping: the recurrent state S [K, V] is the scratchpad-
+resident working set (it never leaves VMEM between chunks); chunk
+inputs stream HBM->VMEM on the static grid schedule.  The grid is
+(batch*heads, n_chunks) with the chunk axis sequential ("arbitrary"),
+so the VMEM scratch carries S across chunks exactly like a worker
+core's accumulator.
+
+Math per chunk (L = chunk length, all fp32 in VMEM):
+    cw   = cumsum(w_log)                (inclusive)
+    rq   = r * exp(cw - w_log)          (decay-adjusted queries)
+    kk   = k * exp(min(-cw, CLAMP))     (decay-adjusted keys)
+    A    = tril(rq kk^T, -1); diag via u-bonus
+    y    = A v + (r u k) v  + rq S_in
+    S'   = exp(cw_L) S_in + (k exp(cw_L - cw))^T v
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EXP_CLAMP = 30.0
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_ref,
+            *, nc: int, L: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # [L, K]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)          # log decay <= 0
+    u = u_ref[0].astype(jnp.float32)          # [1, K] bonus
+
+    cw = jnp.cumsum(w, axis=0)                # [L, K]
+    total = cw[-1:, :]                        # [1, K]
+    e = cw - w                                # exclusive cumsum
+    rq = r * jnp.exp(e)                       # exp <= 0: stable
+
+    # Intra-chunk pairwise decay computed DIRECTLY in VMEM — exponent
+    # e_t - cw_j <= 0 for t > j, so this is stable for ARBITRARY decay
+    # strength (unlike the clamped factorized jnp reference; the [L,L,K]
+    # working set is what the scratchpad makes affordable).
+    seg = e[:, None, :] - cw[None, :, :]      # [L, L, K]
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tri = (lj < li)[:, :, None]
+    P = jnp.where(tri, jnp.exp(seg), 0.0)
+    A = jnp.sum(r[:, None, :] * k[None, :, :] * P, axis=-1)  # [L, L]
+
+    diag = jnp.sum(r * u * k, axis=1, keepdims=True)       # [L, 1]
+    y = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + diag * v
+    y = y + jax.lax.dot_general(rq, s_ref[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    kdec = k * jnp.exp(total - cw)            # [L, K]
+    s_new = s_ref[...] * jnp.exp(total).T + jax.lax.dot_general(
+        kdec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # [K, V]
+    s_ref[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _flush():
+        s_out_ref[0] = s_new.astype(s_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
+         u: jax.Array, *, chunk: int = 128,
+         interpret: bool = False):
+    """r,k,v,w_log: [B,S,H,K]; u: [H,K].
+    Returns (y [B,S,H,K] in r.dtype, final state [B,H,K,K] fp32)."""
+    B, S, H, K = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    fold = lambda a: jnp.moveaxis(a, 1, 2).reshape(B * H, S, K)
+    rf, kf, vf, wf = fold(r), fold(k), fold(v), fold(w_log)
+    uf = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, 1, K)
+
+    grid = (B * H, nc)
+    y, s_fin = pl.pallas_call(
+        functools.partial(_kernel, nc=nc, L=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, 1, K), lambda h, c: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, K), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, K, K), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, K), r.dtype),
+            jax.ShapeDtypeStruct((B * H, K, K), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf)
+
+    y = jnp.moveaxis(y.reshape(B, H, S, K), 1, 2)
+    return y, s_fin.reshape(B, H, K, K)

@@ -1,0 +1,33 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (not module-level constants) so importing this
+module never touches jax device state — required because the dry-run
+must set XLA_FLAGS before first jax init, while smoke tests must see a
+single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis
+    is pure data parallelism (gradient all-reduce over DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on whatever single device is present —
+    smoke tests and CPU examples."""
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+def mesh_tag(mesh) -> str:
+    return "x".join(f"{n}={mesh.shape[n]}" for n in mesh.axis_names)

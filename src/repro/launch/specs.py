@@ -1,0 +1,166 @@
+"""ShapeDtypeStruct input specs for every (architecture x shape) cell.
+
+Same pattern as shannon/kernels: weak-type-correct, shardable stand-ins;
+nothing is ever allocated for the full-size models.  ``input_specs``
+returns the keyword arguments for the cell's step function:
+
+  train   -> step(params, opt_state, batch)
+  prefill -> step(params, batch)
+  decode  -> step(params, cache, token, pos)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm as lm_mod
+from repro.models.spec import shape_tree
+from repro.optim.adamw import adamw_init_spec
+from repro.sharding.rules import ShardingRules, make_rules
+
+
+def _sds(shape, dtype, rules: ShardingRules, logical_axes):
+    return jax.ShapeDtypeStruct(
+        shape, jnp.dtype(dtype),
+        sharding=rules.sharding_for(logical_axes, shape))
+
+
+def rules_for(mesh, cfg: ModelConfig, shape: ShapeConfig,
+              variant: str = "baseline") -> ShardingRules:
+    """Build sharding rules, optionally applying optimization variants
+    (the §Perf hillclimb levers; all semantics-preserving):
+
+      serving_tp — inference weights stationary on the model axis only
+                   (no per-token FSDP gathers); needs weights to fit
+                   16-way (OK up to ~72B bf16 dense).
+      seqpar     — Megatron-style sequence parallelism: the residual
+                   stream (and therefore every remat-saved activation)
+                   is sharded on the model axis between blocks.
+      kvshard    — shard head_dim on the model axis when the (kv-)head
+                   count doesn't divide it (removes the partitioner's
+                   'involuntary full rematerialization' replication).
+
+    Combine with '+': e.g. "seqpar+kvshard".
+    """
+    import dataclasses as _dc
+    kind = shape.kind
+    if shape.kind == "decode" and shape.global_batch == 1:
+        kind = "long_decode"
+    r = make_rules(mesh, kind, shape.global_batch)
+    parts = set(variant.split("+")) if variant else {"baseline"}
+    if "serving_tp" in parts and shape.kind in ("decode", "prefill"):
+        r = _dc.replace(r, fsdp_axes=())
+    if "seqpar" in parts:
+        r = _dc.replace(r, act_seq_axes=r.tensor_axes)
+    if "kvshard" in parts:
+        r = _dc.replace(r, head_dim_axes=r.tensor_axes)
+    return r
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rules: ShardingRules) -> Dict:
+    """Token/target (+ frontend stub) specs for train/prefill."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        # frames are the encoder input (conv frontend stubbed); decoder
+        # sees seq/dec_len_ratio tokens.
+        dec = max(256, S // cfg.encdec.dec_len_ratio)
+        out = {
+            "tokens": _sds((B, dec), jnp.int32, rules, ("batch", None)),
+            "targets": _sds((B, dec), jnp.int32, rules, ("batch", None)),
+            "frames": _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype), rules,
+                           ("batch", None, None)),
+        }
+        return out
+    out = {
+        "tokens": _sds((B, S), jnp.int32, rules, ("batch", None)),
+        "targets": _sds((B, S), jnp.int32, rules, ("batch", None)),
+    }
+    if cfg.frontend.kind == "patches" and cfg.frontend.num_positions:
+        out["patch_embeds"] = _sds(
+            (B, cfg.frontend.num_positions, cfg.d_model),
+            jnp.dtype(cfg.dtype), rules, ("batch", None, None))
+    return out
+
+
+def decode_token_spec(cfg: ModelConfig, shape: ShapeConfig,
+                      rules: ShardingRules):
+    B = shape.global_batch
+    return _sds((B,), jnp.int32, rules, ("batch",))
+
+
+def params_specs(cfg: ModelConfig, rules: ShardingRules):
+    return shape_tree(lm_mod.model_spec(cfg), rules)
+
+
+def opt_specs(cfg: ModelConfig, rules: ShardingRules):
+    return shape_tree(adamw_init_spec(lm_mod.model_spec(cfg)), rules)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rules: ShardingRules, variant: str = "baseline"):
+    cache_len = shape.seq_len
+    windowed = "wincache" in variant
+    return shape_tree(
+        lm_mod.cache_spec(cfg, shape.global_batch, cache_len, windowed),
+        rules)
+
+
+def act_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                  rules: ShardingRules) -> dict:
+    """NamedShardings for the activation sharding constraints (see
+    models.lm._wsc): residual stream, loss logits, KV-cache buffers.
+    Under the `seqpar` variant the residual stream's sequence dim is
+    sharded on the model axis (rules.act_seq_axes)."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    out = {
+        "x": rules.sharding_for(("batch", "seq", None), (B, S, d)),
+        "logits": rules.sharding_for(("batch", None, "vocab"),
+                                     (B, 1, cfg.padded_vocab)),
+    }
+    if rules.act_seq_axes:
+        # full Megatron-SP: block outputs constrained seq-sharded so the
+        # backward emits reduce-scatters instead of dx all-reduces
+        out["x_sp"] = rules.sharding_for(
+            ("batch", "seq", None), (B, S, d))
+    if cfg.attention is not None:
+        a = cfg.attention
+        out["kv"] = rules.sharding_for(
+            ("batch", "kv_seq", "kv_heads", None),
+            (B, S, a.num_kv_heads, a.head_dim))
+    return out
+
+
+def run_options(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                variant: str = "baseline",
+                **overrides) -> "lm_mod.RunOptions":
+    rules = rules_for(mesh, cfg, shape, variant)
+    kw = dict(shardings=act_shardings(cfg, shape, rules))
+    if "moe_gather" in variant:
+        kw["moe_impl"] = "gather"
+    if "moe_ep" in variant:
+        kw["moe_impl"] = "ep"
+    if "wincache" in variant:
+        kw["windowed_cache"] = True
+    kw.update(overrides)
+    return lm_mod.RunOptions(**kw)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                variant: str = "baseline") -> Tuple:
+    """Everything the cell's step function needs, as ShapeDtypeStructs."""
+    rules = rules_for(mesh, cfg, shape, variant)
+    if shape.kind == "train":
+        return (params_specs(cfg, rules), opt_specs(cfg, rules),
+                batch_specs(cfg, shape, rules))
+    if shape.kind == "prefill":
+        return (params_specs(cfg, rules), batch_specs(cfg, shape, rules))
+    # decode
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (params_specs(cfg, rules),
+            cache_specs(cfg, shape, rules, variant),
+            decode_token_spec(cfg, shape, rules), pos)

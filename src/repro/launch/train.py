@@ -1,0 +1,77 @@
+"""Training launcher.
+
+CPU-friendly by default (reduced configs); pass --full to build the
+published architecture sizes (requires a real TPU mesh).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --steps 100 --d-model 128 --layers 2 --seq 128 --batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import TrainConfig, get_config
+from repro.data.pipeline import DataConfig
+from repro.models.lm import RunOptions
+from repro.runtime.trainer import Trainer
+
+
+def reduced_config(cfg, args):
+    kw = dict(num_layers=args.layers, d_model=args.d_model,
+              d_ff=args.d_model * 3, vocab_size=args.vocab,
+              vocab_pad_multiple=64)
+    if cfg.attention:
+        kw["attention"] = dataclasses.replace(
+            cfg.attention, num_heads=4, num_kv_heads=2, head_dim=32)
+    if cfg.moe:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
+            expert_ff=64, group_size=32,
+            shared_expert_ff=64 if cfg.moe.shared_expert_ff else 0)
+    if cfg.ssm:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, chunk_size=32)
+        kw["attention"] = dataclasses.replace(
+            cfg.attention, num_heads=4, num_kv_heads=4, head_dim=64)
+    if cfg.rwkv:
+        kw["rwkv"] = dataclasses.replace(cfg.rwkv, head_dim=32,
+                                         chunk_size=32)
+    if cfg.encdec:
+        kw["encdec"] = dataclasses.replace(cfg.encdec, encoder_layers=2)
+    return dataclasses.replace(cfg, **kw)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="use the published architecture size")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced_config(cfg, args)
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=10,
+                       total_steps=args.steps,
+                       microbatch=args.microbatch)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size,
+                      global_batch=args.batch, seq_len=args.seq)
+    opts = RunOptions(chunk_q=64, chunk_kv=64, loss_chunk=64,
+                      remat=False)
+    tr = Trainer(cfg, tcfg, dcfg, ckpt_dir=args.ckpt_dir, opts=opts)
+    hist = tr.run(args.steps)
+    print(f"first loss {hist['loss'][0]:.4f} -> last "
+          f"{hist['loss'][-1]:.4f} in {hist['wall_s'][0]:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

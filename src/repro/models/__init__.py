@@ -1,0 +1,8 @@
+from repro.models.lm import (RunOptions, cache_spec, compute_logits,
+                             decode_step, forward_hidden, init_cache,
+                             init_params, lm_loss, model_spec, prefill,
+                             train_loss)
+
+__all__ = ["RunOptions", "cache_spec", "compute_logits", "decode_step",
+           "forward_hidden", "init_cache", "init_params", "lm_loss",
+           "model_spec", "prefill", "train_loss"]

@@ -1,0 +1,251 @@
+"""Layer-stack assembly.
+
+A model is a sequence of *stages*; each stage scans over ``n_units``
+repeat units; a unit is a fixed tuple of layer descriptors (positions)
+unrolled inside the scan body.  This gives one traced program per stage
+regardless of depth (compile-time friendly at 512 devices) while
+supporting heterogeneous patterns:
+
+  gemma3    : 1 stage, 8 units  x [L,L,L,L,L,G] attention layers
+  llama4    : 1 stage, 24 units x [moe_layer, dense_layer]
+  zamba2    : stage0: 13 units x [shared_attn+mamba, mamba x5],
+              stage1: 1 unit   x [mamba x3]     (81 = 13*6 + 3)
+  others    : 1 stage, n_layers units x [layer]
+
+Static per-position metadata (window size, rope theta, moe flag) is
+baked into the traced program; per-unit dynamic metadata (the unit
+index, for zamba2's alternating tied blocks) is scanned over.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import rmsnorm, rmsnorm_spec
+from repro.models.spec import Par, stack
+
+
+# ---------------------------------------------------------------------------
+# descriptors
+
+
+@dataclass(frozen=True)
+class LayerDescr:
+    kind: str                  # attn | mamba | rwkv | enc_attn | dec_attn
+    window: int = 0            # 0 = global
+    theta: float = 10_000.0
+    use_moe: bool = False
+    shared_attn: bool = False  # zamba2: tied attn block applied first
+    causal: bool = True
+
+
+@dataclass(frozen=True)
+class StageDescr:
+    n_units: int
+    unit: Tuple[LayerDescr, ...]
+
+    @property
+    def unit_len(self) -> int:
+        return len(self.unit)
+
+
+def build_stages(cfg: ModelConfig) -> Tuple[StageDescr, ...]:
+    a = cfg.attention
+    if cfg.family in ("dense", "vlm"):
+        if a.layer_pattern:
+            unit = tuple(
+                LayerDescr("attn",
+                           window=a.window_for_layer(i),
+                           theta=(a.rope_theta_global or a.rope_theta)
+                           if a.window_for_layer(i) == 0 else a.rope_theta)
+                for i in range(len(a.layer_pattern)))
+            return (StageDescr(cfg.num_layers // len(unit), unit),)
+        unit = (LayerDescr("attn", theta=a.rope_theta),)
+        return (StageDescr(cfg.num_layers, unit),)
+
+    if cfg.family == "moe":
+        m = cfg.moe
+        if m.moe_every == 1:
+            unit = (LayerDescr("attn", theta=a.rope_theta, use_moe=True),)
+            return (StageDescr(cfg.num_layers, unit),)
+        unit = tuple(
+            LayerDescr("attn", theta=a.rope_theta,
+                       use_moe=(i % m.moe_every == 0))
+            for i in range(m.moe_every))
+        return (StageDescr(cfg.num_layers // m.moe_every, unit),)
+
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        per = s.shared_attn_every
+        n_full = cfg.num_layers // per
+        tail = cfg.num_layers - n_full * per
+        unit = tuple(
+            LayerDescr("mamba", shared_attn=(i == 0)) for i in range(per))
+        stages = [StageDescr(n_full, unit)]
+        if tail:
+            stages.append(StageDescr(
+                1, tuple(LayerDescr("mamba") for _ in range(tail))))
+        return tuple(stages)
+
+    if cfg.family == "rwkv":
+        return (StageDescr(cfg.num_layers, (LayerDescr("rwkv"),)),)
+
+    if cfg.family == "encdec":
+        unit = (LayerDescr("dec_attn", theta=0.0),)
+        return (StageDescr(cfg.num_layers, unit),)
+
+    raise ValueError(cfg.family)
+
+
+def encoder_stage(cfg: ModelConfig) -> StageDescr:
+    assert cfg.family == "encdec"
+    return StageDescr(cfg.encdec.encoder_layers,
+                      (LayerDescr("enc_attn", theta=0.0, causal=False),))
+
+
+# ---------------------------------------------------------------------------
+# per-layer parameter specs
+
+
+def layer_spec(cfg: ModelConfig, dsc: LayerDescr) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    if dsc.kind in ("attn", "enc_attn"):
+        p = {
+            "ln_attn": rmsnorm_spec(d),
+            "attn": attn_mod.attn_spec(d, cfg.attention, dt),
+            "ln_ffn": rmsnorm_spec(d),
+        }
+        if dsc.use_moe:
+            p["moe"] = ffn_mod.moe_spec(d, cfg.moe, cfg.activation, dt)
+        else:
+            p["ffn"] = ffn_mod.dense_ffn_spec(d, cfg.d_ff, cfg.activation,
+                                              dt)
+        if cfg.use_post_norm:
+            p["ln_attn_post"] = rmsnorm_spec(d)
+            p["ln_ffn_post"] = rmsnorm_spec(d)
+        return p
+    if dsc.kind == "dec_attn":
+        return {
+            "ln_self": rmsnorm_spec(d),
+            "self": attn_mod.attn_spec(d, cfg.attention, dt),
+            "ln_cross": rmsnorm_spec(d),
+            "cross": attn_mod.attn_spec(d, cfg.attention, dt),
+            "ln_ffn": rmsnorm_spec(d),
+            "ffn": ffn_mod.dense_ffn_spec(d, cfg.d_ff, cfg.activation, dt),
+        }
+    if dsc.kind == "mamba":
+        return {
+            "ln": rmsnorm_spec(d),
+            "mamba": ssm_mod.mamba_spec(d, cfg.ssm, dt),
+        }
+    if dsc.kind == "rwkv":
+        return {
+            "ln_tm": rmsnorm_spec(d),
+            "tm": rwkv_mod.timemix_spec(d, cfg.rwkv, dt),
+            "ln_cm": rmsnorm_spec(d),
+            "cm": rwkv_mod.channelmix_spec(d, cfg.d_ff, dt),
+        }
+    raise ValueError(dsc.kind)
+
+
+def shared_block_spec(cfg: ModelConfig) -> dict:
+    """zamba2's weight-tied attention block operating on concat(x, x0)."""
+    d, dt = cfg.d_model, cfg.dtype
+    return {
+        "ln_in": rmsnorm_spec(2 * d),
+        "attn": attn_mod.attn_spec(2 * d, cfg.attention, dt, d_out=d),
+        "ln_ffn": rmsnorm_spec(d),
+        "ffn": ffn_mod.dense_ffn_spec(d, cfg.d_ff, cfg.activation, dt),
+    }
+
+
+def stage_spec(cfg: ModelConfig, stage: StageDescr) -> dict:
+    unit = {f"pos{i}": layer_spec(cfg, dsc)
+            for i, dsc in enumerate(stage.unit)}
+    return stack(unit, stage.n_units)
+
+
+# ---------------------------------------------------------------------------
+# cache specs (decode state)
+
+
+def layer_cache_spec(cfg: ModelConfig, dsc: LayerDescr, batch: int,
+                     cache_len: int, windowed: bool = False) -> dict:
+    dt = cfg.dtype
+    a = cfg.attention
+    if dsc.kind in ("attn", "enc_attn"):
+        L = cache_len
+        if windowed and dsc.window > 0:
+            # ring buffer: a sliding-window layer never attends past
+            # `window` tokens back, so its cache is O(window), not
+            # O(seq) — the big long-context memory lever for
+            # local:global archs like gemma3 (see §Perf).
+            L = min(cache_len, dsc.window)
+        return {
+            "k": Par((batch, L, a.num_kv_heads, a.head_dim),
+                     ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                     dtype=dt),
+            "v": Par((batch, L, a.num_kv_heads, a.head_dim),
+                     ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                     dtype=dt),
+        }
+    if dsc.kind == "dec_attn":
+        ek = cfg.encdec.cross_kv_len
+        return {
+            "k": Par((batch, cache_len, a.num_kv_heads, a.head_dim),
+                     ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                     dtype=dt),
+            "v": Par((batch, cache_len, a.num_kv_heads, a.head_dim),
+                     ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                     dtype=dt),
+            "ck": Par((batch, ek, a.num_kv_heads, a.head_dim),
+                      ("batch", None, "kv_heads", None), init="zeros",
+                      dtype=dt),
+            "cv": Par((batch, ek, a.num_kv_heads, a.head_dim),
+                      ("batch", None, "kv_heads", None), init="zeros",
+                      dtype=dt),
+        }
+    if dsc.kind == "mamba":
+        c = ssm_mod.mamba_state_spec(batch, cfg.d_model, cfg.ssm, dt)
+        if dsc.shared_attn:
+            c["shared_k"] = Par(
+                (batch, cache_len, a.num_kv_heads, a.head_dim),
+                ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                dtype=dt)
+            c["shared_v"] = Par(
+                (batch, cache_len, a.num_kv_heads, a.head_dim),
+                ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                dtype=dt)
+        return c
+    if dsc.kind == "rwkv":
+        return rwkv_mod.rwkv_state_spec(batch, cfg.d_model, cfg.rwkv, dt)
+    raise ValueError(dsc.kind)
+
+
+def stage_cache_spec(cfg: ModelConfig, stage: StageDescr, batch: int,
+                     cache_len: int, windowed: bool = False) -> dict:
+    unit = {f"pos{i}": layer_cache_spec(cfg, dsc, batch, cache_len,
+                                        windowed)
+            for i, dsc in enumerate(stage.unit)}
+    return stack(unit, stage.n_units)
+
+
+# ---------------------------------------------------------------------------
+# tree helpers
+
+
+def tree_index(tree, i):
+    """Static or traced index into the leading (stack) axis."""
+    if isinstance(i, int):
+        return jax.tree.map(lambda a: a[i], tree)
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+        tree)

@@ -1,0 +1,242 @@
+"""RWKV-6 ("Finch") blocks: data-dependent-decay linear attention
+(WKV6) with token-shift mixing, plus the squared-ReLU channel mix.
+
+WKV6 recurrence per head (K = key dim, V = value dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: [K, V])
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with per-channel decay w_t in (0,1) computed from the input (low-rank).
+
+The chunked form factorizes the interval decay products
+exp(e_t - cw_j); the k-side exponent (-cw_j >= 0) is clamped at
+``_EXP_CLAMP`` to stay finite in fp32.  Contributions attenuated by more
+than e^-30 are effectively zero, so the clamp is semantics-preserving at
+fp32 resolution (validated against the exact sequential scan in
+tests/test_kernel_wkv6.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RWKVConfig
+from repro.models.spec import Par
+
+_EXP_CLAMP = 30.0
+
+
+def rwkv_dims(d_model: int, r: RWKVConfig):
+    nheads = d_model // r.head_dim
+    return nheads, r.head_dim
+
+
+def timemix_spec(d_model: int, r: RWKVConfig, dtype: str) -> dict:
+    nheads, hd = rwkv_dims(d_model, r)
+    return {
+        "maa_x": Par((d_model,), (None,), init="zeros", dtype="float32"),
+        "maa_rkvwg": Par((5, d_model), (None, None), init="zeros",
+                         dtype="float32"),
+        "mix_w1": Par((d_model, 5 * r.mix_lora), ("embed", None),
+                      init="scaled", dtype=dtype),
+        "mix_w2": Par((5, r.mix_lora, d_model), (None, None, "embed"),
+                      init="scaled", dtype=dtype),
+        "w0": Par((d_model,), (None,), init="decay", dtype="float32"),
+        "wd_w1": Par((d_model, r.decay_lora), ("embed", None),
+                     init="scaled", dtype=dtype),
+        "wd_w2": Par((r.decay_lora, d_model), (None, "embed"),
+                     init="scaled", dtype=dtype),
+        "wr": Par((d_model, d_model), ("embed", "heads"), init="scaled",
+                  dtype=dtype),
+        "wk": Par((d_model, d_model), ("embed", "heads"), init="scaled",
+                  dtype=dtype),
+        "wv": Par((d_model, d_model), ("embed", "heads"), init="scaled",
+                  dtype=dtype),
+        "wg": Par((d_model, d_model), ("embed", "heads"), init="scaled",
+                  dtype=dtype),
+        "u": Par((nheads, hd), (None, None), init="zeros", dtype="float32"),
+        "ln_x": Par((d_model,), (None,), init="ones", dtype="float32"),
+        "wo": Par((d_model, d_model), ("heads", "embed"), init="scaled",
+                  dtype=dtype),
+    }
+
+
+def channelmix_spec(d_model: int, d_ff: int, dtype: str) -> dict:
+    return {
+        "maa_k": Par((d_model,), (None,), init="zeros", dtype="float32"),
+        "maa_r": Par((d_model,), (None,), init="zeros", dtype="float32"),
+        "wk": Par((d_model, d_ff), ("embed", "ffn"), init="scaled",
+                  dtype=dtype),
+        "wv": Par((d_ff, d_model), ("ffn", "embed"), init="scaled",
+                  dtype=dtype),
+        "wr": Par((d_model, d_model), ("embed", None), init="scaled",
+                  dtype=dtype),
+    }
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: x_{t-1}, with `prev` [B,1,d] carried across calls."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# WKV6 kernels (reference forms; the Pallas kernel mirrors the chunked one)
+
+
+def wkv6_sequential(r, k, v, w_log, u, init_state=None):
+    """Exact per-step scan (oracle).  r,k,v,w_log: [B,S,H,K]; u: [H,K].
+    Returns (y [B,S,H,V], final_state [B,H,K,V])."""
+    B, S, H, K = r.shape
+    s0 = (jnp.zeros((B, H, K, K), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(S_, inp):
+        rt, kt, vt, wt = inp   # [B,H,K] each
+        kv = kt[..., :, None] * vt[..., None, :]          # [B,H,K,V]
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S_ + u[None, :, :, None] * kv)
+        S_new = jnp.exp(wt)[..., None] * S_ + kv
+        return S_new, y
+
+    seq = lambda a: jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+    final, ys = jax.lax.scan(step, s0, (seq(r), seq(k), seq(v), seq(w_log)))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), final
+
+
+def wkv6_chunked(r, k, v, w_log, u, chunk: int, init_state=None):
+    """Chunked WKV6.  Shapes as in wkv6_sequential."""
+    B, S, H, K = r.shape
+    assert S % chunk == 0, (S, chunk)
+    NC = S // chunk
+    f32 = jnp.float32
+    rc = r.reshape(B, NC, chunk, H, K).astype(f32)
+    kc = k.reshape(B, NC, chunk, H, K).astype(f32)
+    vc = v.reshape(B, NC, chunk, H, K).astype(f32)
+    wc = w_log.reshape(B, NC, chunk, H, K).astype(f32)
+
+    cw = jnp.cumsum(wc, axis=2)          # inclusive sums of log-decay
+    e = cw - wc                          # exclusive
+    total = cw[:, :, -1]                 # [B,NC,H,K]
+
+    rq = rc * jnp.exp(e)                                    # exp <= 0
+    kk = kc * jnp.exp(jnp.minimum(-cw, _EXP_CLAMP))         # clamped
+    A = jnp.einsum("bclhk,bcmhk->bchlm", rq, kk)            # t=l, j=m
+    tril = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), k=-1)
+    A = jnp.where(tril[None, None, None], A, 0.0)
+    diag = jnp.einsum("bclhk,bclhk->bclh", rc * u[None, None], kc)
+    y_intra = jnp.einsum("bchlm,bcmhk->bclhk", A, vc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # chunk state contributions: sum_j exp(total - cw_j) k_j ^T v_j
+    kdec = kc * jnp.exp(total[:, :, None] - cw)             # exp <= 0
+    cstate = jnp.einsum("bclhk,bclhv->bchkv", kdec, vc)
+
+    s0 = (jnp.zeros((B, H, K, K), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def boundary(carry, inp):
+        cs, tot = inp
+        new = carry * jnp.exp(tot)[..., None] + cs
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        boundary, s0, (jnp.moveaxis(cstate, 1, 0), jnp.moveaxis(total, 1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                          # [B,NC,H,K,V]
+
+    y_inter = jnp.einsum("bclhk,bchkv->bclhv", rq, prev)
+    y = (y_intra + y_inter).reshape(B, S, H, K)
+    return y.astype(r.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# layer-level forward
+
+
+def _ddlerp(p, x, xprev):
+    """RWKV6 data-dependent token-shift mixing -> (xr,xk,xv,xw,xg)."""
+    dx = (xprev - x).astype(jnp.float32)
+    xx = x.astype(jnp.float32) + dx * p["maa_x"]
+    B, S, d = x.shape
+    m = jnp.tanh(jnp.einsum("bsd,dl->bsl", xx.astype(x.dtype), p["mix_w1"]))
+    m = m.reshape(B, S, 5, -1)
+    adj = jnp.einsum("bsfl,fld->fbsd", m, p["mix_w2"]).astype(jnp.float32)
+    outs = []
+    for i in range(5):
+        mi = p["maa_rkvwg"][i] + adj[i]
+        outs.append((x.astype(jnp.float32) + dx * mi).astype(x.dtype))
+    return outs  # r, k, v, w, g order
+
+
+def timemix_forward(p: dict, x: jax.Array, r_cfg: RWKVConfig,
+                    state: Optional[dict] = None,
+                    return_state: bool = False, chunk: int = 0):
+    """Full-sequence RWKV6 time-mix.  x: [B,S,d]."""
+    nheads, hd = rwkv_dims(x.shape[-1], r_cfg)
+    prev = None if state is None else state["shift"]
+    xprev = _shift(x, prev)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xprev)
+
+    B, S, d = x.shape
+    rh = jnp.einsum("bsd,dk->bsk", xr, p["wr"]).reshape(B, S, nheads, hd)
+    kh = jnp.einsum("bsd,dk->bsk", xk, p["wk"]).reshape(B, S, nheads, hd)
+    vh = jnp.einsum("bsd,dk->bsk", xv, p["wv"]).reshape(B, S, nheads, hd)
+    g = jnp.einsum("bsd,dk->bsk", xg, p["wg"])
+
+    wl = jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["wd_w1"]))
+    wl = jnp.einsum("bsl,ld->bsd", wl, p["wd_w2"]).astype(jnp.float32)
+    w_log = -jnp.exp(p["w0"] + wl)                     # [B,S,d] <= 0
+    w_log = w_log.reshape(B, S, nheads, hd)
+
+    chunk = chunk or r_cfg.chunk_size
+    init = None if state is None else state["wkv"]
+    if S % chunk == 0 and S > 1:
+        y, final = wkv6_chunked(rh, kh, vh, w_log, p["u"], chunk, init)
+    else:
+        y, final = wkv6_sequential(rh, kh, vh, w_log, p["u"], init)
+
+    # per-head groupnorm (scale-only) then gate
+    y32 = y.astype(jnp.float32)
+    mu = jnp.mean(y32, axis=-1, keepdims=True)
+    var = jnp.var(y32, axis=-1, keepdims=True)
+    y32 = (y32 - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (y32.reshape(B, S, d) * p["ln_x"]).astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bsk,kd->bsd", y, p["wo"])
+    if return_state:
+        return out, {"shift": x[:, -1:],
+                     "wkv": final.astype(x.dtype)}
+    return out
+
+
+def channelmix_forward(p: dict, x: jax.Array,
+                       state: Optional[jax.Array] = None,
+                       return_state: bool = False):
+    prev = None if state is None else state
+    xprev = _shift(x, prev)
+    dx = (xprev - x).astype(jnp.float32)
+    xk = (x.astype(jnp.float32) + dx * p["maa_k"]).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + dx * p["maa_r"]).astype(x.dtype)
+    kh = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    kv = jnp.einsum("bsf,fd->bsd", kh, p["wv"])
+    y = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"])) * kv
+    if return_state:
+        return y, x[:, -1:]
+    return y
+
+
+def rwkv_state_spec(batch: int, d_model: int, r: RWKVConfig,
+                    dtype: str) -> dict:
+    nheads, hd = rwkv_dims(d_model, r)
+    return {
+        "tm": {
+            "shift": Par((batch, 1, d_model), ("batch", None, None),
+                         init="zeros", dtype=dtype),
+            "wkv": Par((batch, nheads, hd, hd),
+                       ("batch", "heads", None, None), init="zeros",
+                       dtype=dtype),
+        },
+        "cm": Par((batch, 1, d_model), ("batch", None, None), init="zeros",
+                  dtype=dtype),
+    }

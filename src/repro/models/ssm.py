@@ -1,0 +1,201 @@
+"""Mamba2 (SSD — state-space duality) blocks, used by zamba2-7b.
+
+The recurrence  h_t = exp(a_t) h_{t-1} + dt_t * B_t x_t^T,
+                y_t = C_t · h_t + D * x_t
+is computed in the chunked (matrix) form: intra-chunk attention-like
+term + inter-chunk state carry via lax.scan.  Deterministic dataflow —
+static-schedulable per the paper's requirement.  Exponents of the decay
+segments are always <= 0 (scalar per-head decay), so the chunked form is
+numerically stable without rescaling.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.common import rmsnorm
+from repro.models.spec import Par
+
+
+def ssm_dims(d_model: int, s: SSMConfig):
+    d_inner = s.expand * d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim
+    return d_inner, nheads, conv_dim
+
+
+def mamba_spec(d_model: int, s: SSMConfig, dtype: str) -> dict:
+    d_inner, nheads, conv_dim = ssm_dims(d_model, s)
+    d_in_proj = 2 * d_inner + 2 * s.state_dim + nheads
+    return {
+        "in_proj": Par((d_model, d_in_proj), ("embed", "ffn"), init="scaled",
+                       dtype=dtype),
+        "conv_w": Par((s.conv_kernel, conv_dim), (None, "ffn"),
+                      init="scaled", dtype=dtype),
+        "conv_b": Par((conv_dim,), ("ffn",), init="zeros", dtype=dtype),
+        "A_log": Par((nheads,), (None,), init="decay", dtype="float32"),
+        "D": Par((nheads,), (None,), init="ones", dtype="float32"),
+        "dt_bias": Par((nheads,), (None,), init="zeros", dtype="float32"),
+        "norm": Par((d_inner,), (None,), init="ones", dtype="float32"),
+        "out_proj": Par((d_inner, d_model), ("ffn", "embed"), init="scaled",
+                        dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x: [B,S,C]; w: [K,C]; state: [B,K-1,C]
+    carries the last K-1 inputs for decode.  Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, S+K-1, C]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return y, new_state
+
+
+def _split_proj(zxbcdt: jax.Array, d_inner: int, state: int, nheads: int):
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + d_inner + 2 * state]
+    dt = zxbcdt[..., -nheads:]
+    return z, xBC, dt
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                chunk: int, init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  [B,S,H,P]  (already multiplied by dt)
+    a:  [B,S,H]    log-decay per step (<= 0)
+    Bm: [B,S,N], Cm: [B,S,N]
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    NC = S // chunk
+    xc = x.reshape(Bsz, NC, chunk, H, P)
+    ac = a.reshape(Bsz, NC, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, NC, chunk, N)
+    Cc = Cm.reshape(Bsz, NC, chunk, N)
+
+    ca = jnp.cumsum(ac, axis=2)                       # inclusive [B,NC,L,H]
+    total = ca[:, :, -1]                              # [B,NC,H]
+
+    # intra-chunk: y[t] += sum_{j<=t} (C_t.B_j) exp(ca_t - ca_j) x_j
+    seg = ca[:, :, :, None, :] - ca[:, :, None, :, :]  # [B,NC,L(t),L(j),H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    seg = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bctn,bcjn->bctj", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    att = (cb[..., None] * seg).astype(x.dtype)        # [B,NC,L,L,H]
+    y_intra = jnp.einsum("bctjh,bcjhp->bcthp", att, xc)
+
+    # chunk boundary states: sum_j exp(total - ca_j) B_j x_j^T
+    decay_end = jnp.exp(total[:, :, None, :] - ca)     # [B,NC,L,H]
+    cstate = jnp.einsum("bclh,bcln,bclhp->bchnp",
+                        decay_end.astype(x.dtype), Bc.astype(x.dtype), xc)
+
+    s0 = (jnp.zeros((Bsz, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def boundary(carry, inp):
+        cs, tot = inp                                  # [B,H,N,P], [B,H]
+        new = carry * jnp.exp(tot)[:, :, None, None] + cs.astype(jnp.float32)
+        return new, carry                              # emit state BEFORE
+
+    total_t = jnp.moveaxis(total, 1, 0)                # [NC,B,H]
+    cstate_t = jnp.moveaxis(cstate, 1, 0)              # [NC,B,H,N,P]
+    final, prev_states = jax.lax.scan(boundary, s0, (cstate_t, total_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # [B,NC,H,N,P]
+
+    # inter-chunk: y[t] += exp(ca_t) * C_t . S_prev
+    y_inter = jnp.einsum("bctn,bcnhp->bcthp",
+                         Cc.astype(x.dtype),
+                         jnp.swapaxes(prev_states, 2, 3).astype(x.dtype))
+    y_inter = y_inter * jnp.exp(ca)[..., None].astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final.astype(x.dtype)
+
+
+def mamba_forward(p: dict, x: jax.Array, s: SSMConfig,
+                  state: Optional[dict] = None, return_state: bool = False):
+    """Full-sequence Mamba2 block.  x: [B,S,d]."""
+    d_model = x.shape[-1]
+    d_inner, nheads, conv_dim = ssm_dims(d_model, s)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt = _split_proj(zxbcdt, d_inner, s.state_dim, nheads)
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xin = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + s.state_dim]
+    Cm = xBC[..., d_inner + s.state_dim:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["A_log"]) * dt                                 # <= 0
+    xh = xin.reshape(*xin.shape[:-1], nheads, s.head_dim)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+
+    init_ssm = None if state is None else state["ssm"]
+    S = x.shape[1]
+    chunk = s.chunk_size if S % s.chunk_size == 0 else S
+    y, final = ssd_chunked(xdt, a, Bm, Cm, chunk, init_ssm)
+    y = y + xh * p["D"][:, None].astype(xh.dtype)
+    y = y.reshape(*x.shape[:-1], d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_state:
+        return out, {"conv": new_conv, "ssm": final}
+    return out
+
+
+def mamba_decode(p: dict, x: jax.Array, s: SSMConfig, state: dict):
+    """Single-token decode.  x: [B,1,d]; state {conv [B,K-1,C],
+    ssm [B,H,N,P]}."""
+    d_model = x.shape[-1]
+    d_inner, nheads, _ = ssm_dims(d_model, s)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt = _split_proj(zxbcdt, d_inner, s.state_dim, nheads)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                 state["conv"])
+    xBC = jax.nn.silu(xBC)
+    xin = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + s.state_dim]          # [B,1,N]
+    Cm = xBC[..., d_inner + s.state_dim:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,1,H]
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                        # [B,1,H]
+    xh = xin.reshape(x.shape[0], nheads, s.head_dim)              # [B,H,P]
+    xdt = xh * dt[:, 0, :, None].astype(xh.dtype)
+
+    S0 = state["ssm"].astype(jnp.float32)                         # [B,H,N,P]
+    upd = jnp.einsum("bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                     xdt.astype(jnp.float32))
+    S1 = S0 * a[:, 0, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), S1)
+    y = y.astype(xh.dtype) + xh * p["D"][:, None].astype(xh.dtype)
+    y = y.reshape(x.shape[0], 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": S1.astype(state["ssm"].dtype)}
+
+
+def mamba_state_spec(batch: int, d_model: int, s: SSMConfig,
+                     dtype: str) -> dict:
+    d_inner, nheads, conv_dim = ssm_dims(d_model, s)
+    return {
+        "conv": Par((batch, s.conv_kernel - 1, conv_dim),
+                    ("batch", None, "ffn"), init="zeros", dtype=dtype),
+        "ssm": Par((batch, nheads, s.state_dim, s.head_dim),
+                   ("batch", "heads", None, None), init="zeros",
+                   dtype=dtype),
+    }

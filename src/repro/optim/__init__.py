@@ -1,0 +1,5 @@
+from repro.optim.adamw import (adamw_init, adamw_init_spec, adamw_update,
+                               cosine_lr, global_norm, make_train_step)
+
+__all__ = ["adamw_init", "adamw_init_spec", "adamw_update", "cosine_lr",
+           "global_norm", "make_train_step"]

@@ -1,0 +1,146 @@
+"""AdamW + LR schedules + gradient clipping + the jit-able train step.
+
+Pure JAX (no optax dependency).  Moments are fp32 regardless of the
+(bf16) parameter dtype; the update math runs in fp32 and is cast back.
+Optimizer state is sharded exactly like the parameters (ZeRO-style: the
+fsdp/tensor shards of a weight own the matching shard of its moments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import replace
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import lm as lm_mod
+from repro.models.spec import Par, is_par
+
+
+# ---------------------------------------------------------------------------
+# schedules
+
+
+def cosine_lr(tcfg: TrainConfig) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = tcfg.learning_rate * (step + 1) / max(1, tcfg.warmup_steps)
+        prog = jnp.clip((step - tcfg.warmup_steps)
+                        / max(1, tcfg.total_steps - tcfg.warmup_steps),
+                        0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog)) * tcfg.learning_rate
+        return jnp.where(step < tcfg.warmup_steps, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_init_spec(spec_tree) -> dict:
+    """Par-tree for the optimizer state (for dry-run ShapeDtypeStructs)."""
+    f32 = lambda p: replace(p, dtype="float32", init="zeros")
+    return {
+        "m": jax.tree.map(f32, spec_tree, is_leaf=is_par),
+        "v": jax.tree.map(f32, spec_tree, is_leaf=is_par),
+        "count": Par((), (), init="zeros", dtype="int32"),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads, opt_state, params, tcfg: TrainConfig,
+                 lr_fn: Callable):
+    count = opt_state["count"] + 1
+    lr = lr_fn(opt_state["count"])
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9)) \
+        if tcfg.grad_clip > 0 else 1.0
+
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            step = step + wd * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    # out is a tree of 3-tuples at the leaves of params
+    p_new = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    m_new = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    v_new = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": m_new, "v": v_new, "count": count}
+    return p_new, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# train step factory
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    opts: Optional[lm_mod.RunOptions] = None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Microbatching (gradient accumulation) happens via lax.scan
+    when tcfg.microbatch > 1."""
+    opts = opts or lm_mod.DEFAULT_OPTS
+    lr_fn = cosine_lr(tcfg)
+    loss_fn = lambda p, b: lm_mod.train_loss(cfg, p, b, opts)
+
+    def step(params, opt_state, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            nm = tcfg.microbatch
+
+            def split(x):
+                return jnp.moveaxis(
+                    x.reshape((nm, x.shape[0] // nm) + x.shape[1:]), 0, 0)
+
+            micro = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                tot_loss, tot_grads = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (tot_loss + l,
+                        jax.tree.map(jnp.add, tot_grads, g)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zero_g), micro)
+            loss = loss / nm
+            grads = jax.tree.map(lambda g: g / nm, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, info = adamw_update(grads, opt_state, params,
+                                               tcfg, lr_fn)
+        metrics = {"loss": loss, **info}
+        return params, opt_state, metrics
+
+    return step

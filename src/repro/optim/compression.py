@@ -1,0 +1,68 @@
+"""int8 gradient compression for the cross-pod data-parallel axis.
+
+At multi-pod scale the "pod" axis rides the slowest links (DCN), and
+the gradient all-reduce across pods is pure data parallelism — the
+classic place for lossy compression.  Scheme (per leaf):
+
+    scale  = psum_max(|g|) / 127          (exact, tiny)
+    q      = round(g / scale)  : int8
+    g_hat  = psum(q.int32) * scale / n_pods
+
+4x fewer bytes than fp32 (2x vs bf16) on the pod axis; within-pod
+FSDP/TP reduction stays exact.  Wrapped with shard_map over ONLY the
+pod axis (`auto` leaves data/model to GSPMD), so it composes with the
+existing train step unchanged.
+
+Error bound: |g_hat - mean(g)| <= scale/2 per element (uniform
+quantization), property-tested in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _compress_psum_leaf(g: jax.Array, axis: str) -> jax.Array:
+    gf = g.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis)
+    return (total.astype(jnp.float32) * scale / n).astype(g.dtype)
+
+
+def compressed_grad_mean(grads: Any, mesh, axis: str = "pod") -> Any:
+    """Mean of per-pod gradients with int8 wire format.
+
+    grads: pytree of per-pod partial gradients (already reduced within
+    the pod).  Uses shard_map over the pod axis only; other mesh axes
+    stay under GSPMD (auto)."""
+    if axis not in mesh.axis_names or mesh.shape[axis] == 1:
+        return grads
+    try:
+        from jax import shard_map
+    except ImportError:                      # pragma: no cover
+        from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    auto = frozenset(a for a in mesh.axis_names if a != axis)
+
+    def fn(g):
+        return jax.tree.map(partial(_compress_psum_leaf, axis=axis), g)
+
+    spec = jax.tree.map(lambda _: P(), grads)
+    return shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                     auto=auto, check_vma=False)(grads)
+
+
+def quantize_roundtrip(g: jax.Array) -> jax.Array:
+    """Single-host reference of the wire format (for tests/error
+    analysis): quantize to int8 with the global max-scale, dequantize."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(g.dtype)

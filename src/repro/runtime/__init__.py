@@ -1,0 +1,6 @@
+from repro.runtime.trainer import Trainer, TrainerState
+from repro.runtime.fault import (PreemptionGuard, StragglerMonitor,
+                                 elastic_remesh_plan)
+
+__all__ = ["Trainer", "TrainerState", "PreemptionGuard",
+           "StragglerMonitor", "elastic_remesh_plan"]

@@ -1,0 +1,107 @@
+"""The fault-tolerant training runtime.
+
+Wires together: model (models/), optimizer (optim/), data (data/),
+checkpointing (checkpoint/) and the fault handlers (runtime/fault.py).
+Designed so a preempted/crashed job relaunched with `Trainer.run()`
+resumes bit-exact: deterministic data (pure function of step), full
+(params, opt_state, step) in the checkpoint, periodic + preemption
+saves.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import DataConfig, SyntheticLMDataset
+from repro.models import lm as lm_mod
+from repro.optim.adamw import adamw_init, make_train_step
+from repro.runtime.fault import PreemptionGuard, StragglerMonitor
+
+
+@dataclass
+class TrainerState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    tcfg: TrainConfig
+    dcfg: DataConfig
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    opts: lm_mod.RunOptions = field(default_factory=lm_mod.RunOptions)
+    log_every: int = 10
+    on_metrics: Optional[Callable[[int, Dict], None]] = None
+
+    def __post_init__(self):
+        self.dataset = SyntheticLMDataset(self.dcfg)
+        self.ckpt = (CheckpointManager(self.ckpt_dir)
+                     if self.ckpt_dir else None)
+        self.guard = PreemptionGuard()
+        self.straggler = StragglerMonitor()
+        self._step_fn = jax.jit(
+            make_train_step(self.cfg, self.tcfg, self.opts),
+            donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------ state
+
+    def init_state(self, seed: int = 0) -> TrainerState:
+        params = lm_mod.init_params(self.cfg, jax.random.PRNGKey(seed))
+        return TrainerState(params, adamw_init(params), 0)
+
+    def restore_or_init(self) -> TrainerState:
+        state = self.init_state(self.tcfg.seed)
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            tree = {"params": state.params, "opt": state.opt_state}
+            restored, step = self.ckpt.restore(tree)
+            return TrainerState(restored["params"], restored["opt"], step)
+        return state
+
+    # -------------------------------------------------------------- run
+
+    def run(self, num_steps: int) -> Dict[str, List[float]]:
+        state = self.restore_or_init()
+        history: Dict[str, List[float]] = {"loss": [], "step_s": []}
+        t_wall = time.monotonic()
+        while state.step < num_steps:
+            batch = self.dataset.batch_at(state.step)
+            self.straggler.step_start()
+            params, opt, metrics = self._step_fn(
+                state.params, state.opt_state, batch)
+            loss = float(metrics["loss"])
+            state = TrainerState(params, opt, state.step + 1)
+            slow = self.straggler.step_end(state.step)
+            history["loss"].append(loss)
+            history["step_s"].append(
+                self.straggler.mean_step_s or 0.0)
+            if self.on_metrics:
+                self.on_metrics(state.step, metrics)
+            if self.log_every and state.step % self.log_every == 0:
+                print(f"step {state.step:5d} loss {loss:.4f} "
+                      f"mean_step {self.straggler.mean_step_s:.3f}s"
+                      + (" [STRAGGLER]" if slow else ""))
+            if self.ckpt and (state.step % self.ckpt_every == 0
+                              or self.guard.preempted):
+                self.ckpt.save(state.step,
+                               {"params": state.params,
+                                "opt": state.opt_state},
+                               blocking=self.guard.preempted)
+            if self.guard.preempted:
+                print(f"preempted at step {state.step}; "
+                      f"checkpoint saved, exiting cleanly")
+                break
+        if self.ckpt:
+            self.ckpt.save(state.step, {"params": state.params,
+                                        "opt": state.opt_state})
+            self.ckpt.wait()
+        history["wall_s"] = [time.monotonic() - t_wall]
+        self.final_state = state
+        return history

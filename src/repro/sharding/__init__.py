@@ -1,0 +1,5 @@
+from repro.sharding.rules import (ShardingRules, make_rules,
+                                  logical_to_pspec, named_sharding)
+
+__all__ = ["ShardingRules", "make_rules", "logical_to_pspec",
+           "named_sharding"]

@@ -1,0 +1,140 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+This is the datacenter-scale version of the paper's partitioning: weights
+are *stationary* in per-device shards (the paper pins B-matrix column
+blocks in each core's scratchpad), activations stream through, partial
+results reduce.  Rules:
+
+  - big weight matrices are 2D-sharded: feature/head/expert/vocab dims on
+    the ``tensor`` ("model") axis, the d_model dim on the ``fsdp``
+    ("data") axis (ZeRO-style),
+  - activations shard batch on ("pod","data"),
+  - long-context decode shards the KV-cache *sequence* on "data",
+  - any dim that does not divide its mesh axes is replicated
+    (divisibility fallback; see DESIGN.md §4/§5).
+
+Every rule resolution is per-parameter stateful: a mesh axis is used at
+most once per array (GSPMD requirement).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+# Logical axis vocabulary used by the model param/activation specs.
+#   vocab, embed (d_model inside weights), ffn, heads, kv_heads, head_dim,
+#   experts, expert_ff, stack (scan-stacked layers), batch, seq, kv_seq,
+#   state, conv_k, group, capacity
+# Anything unlisted resolves to replicated.
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]        # activations' batch dim
+    fsdp_axes: Tuple[str, ...]         # weights' d_model dim (ZeRO)
+    tensor_axes: Tuple[str, ...]       # weights' feature dims (Megatron)
+    kv_seq_axes: Tuple[str, ...] = ()  # KV-cache sequence dim (long ctx)
+    # optimization levers (see launch/specs.py variants + §Perf):
+    head_dim_axes: Tuple[str, ...] = ()   # shard head_dim when heads
+    #                                       don't divide the model axis
+    act_seq_axes: Tuple[str, ...] = ()    # sequence parallelism for the
+    #                                       residual stream / remat saves
+
+    def _table(self) -> Dict[str, Tuple[str, ...]]:
+        return {
+            "vocab": self.tensor_axes,
+            "embed": self.fsdp_axes,
+            "ffn": self.tensor_axes,
+            "heads": self.tensor_axes,
+            "kv_heads": self.tensor_axes,
+            "head_dim": self.head_dim_axes,
+            "experts": self.tensor_axes,
+            "expert_ff": self.fsdp_axes,
+            "batch": self.batch_axes,
+            "kv_seq": self.kv_seq_axes,
+            "seq": self.act_seq_axes,
+        }
+
+    def axis_size(self, names: Tuple[str, ...]) -> int:
+        return int(np.prod([self.mesh.shape[n] for n in names], dtype=np.int64)) \
+            if names else 1
+
+    def spec_for(self, logical_axes: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> PS:
+        """Resolve one array's logical axes to a PartitionSpec."""
+        table = self._table()
+        used: set = set()
+        out = []
+        for logical, dim in zip(logical_axes, shape):
+            entry: Optional[Tuple[str, ...]] = None
+            if logical is not None:
+                cand = table.get(logical, ())
+                if cand and not (set(cand) & used):
+                    if dim % self.axis_size(cand) == 0 and dim > 0:
+                        entry = cand
+            if entry:
+                used.update(entry)
+                out.append(entry if len(entry) > 1 else entry[0])
+            else:
+                out.append(None)
+        # trim trailing Nones (cosmetic)
+        while out and out[-1] is None:
+            out.pop()
+        return PS(*out)
+
+    def sharding_for(self, logical_axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, shape))
+
+
+def make_rules(mesh: Mesh, shape_kind: str = "train",
+               global_batch: int = 0) -> ShardingRules:
+    """Build rules for a mesh and a shape regime.
+
+    shape_kind: train | prefill | decode | long_decode
+    """
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    batch: Tuple[str, ...] = (("pod", "data") if has_pod else ("data",))
+    fsdp: Tuple[str, ...] = ("data",) if "data" in names else ()
+    tensor: Tuple[str, ...] = ("model",) if "model" in names else ()
+    kv_seq: Tuple[str, ...] = ()
+
+    if shape_kind == "long_decode" or (
+            shape_kind == "decode" and global_batch == 1):
+        # batch=1: cannot shard batch; shard the KV sequence over the
+        # whole mesh instead (flash-decoding-style partial softmax).
+        batch = ()
+        kv_seq = tuple(a for a in ("data", "model") if a in names)
+    else:
+        if shape_kind in ("decode", "prefill"):
+            # KV heads rarely divide the model axis (GQA); shard the
+            # cache sequence dim on "model" instead — 16x cache-memory
+            # saving, and decode attention becomes a sharded
+            # flash-decode (partial-softmax combine via GSPMD).
+            kv_seq = ("model",) if "model" in names else ()
+        # shard batch only if divisible; else fall back to data-only
+        bsz = global_batch
+        if bsz and has_pod:
+            full = int(np.prod([mesh.shape[a] for a in batch]))
+            if bsz % full != 0:
+                batch = ("data",)
+    return ShardingRules(mesh=mesh, batch_axes=batch, fsdp_axes=fsdp,
+                         tensor_axes=tensor, kv_seq_axes=kv_seq)
+
+
+def logical_to_pspec(tree_axes, tree_shapes, rules: ShardingRules):
+    """Map a pytree of logical-axes tuples + shapes to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes, shp: rules.spec_for(axes, shp), tree_axes, tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def named_sharding(rules: ShardingRules, spec: PS) -> NamedSharding:
+    return NamedSharding(rules.mesh, spec)

@@ -1,0 +1,56 @@
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.configs import get_config  # noqa: E402
+from repro.models.lm import RunOptions  # noqa: E402
+
+TINY_OPTS = RunOptions(chunk_q=16, chunk_kv=16, loss_chunk=16, remat=False)
+
+
+def tiny_cfg(name: str, **kw):
+    """Reduced-config instance of an assigned architecture (same family,
+    small dims) — used by the per-arch smoke tests."""
+    cfg = get_config(name)
+    base = dict(d_model=128, d_ff=256, vocab_size=512,
+                vocab_pad_multiple=64)
+    if cfg.attention:
+        base["attention"] = dataclasses.replace(
+            cfg.attention, num_heads=4, num_kv_heads=2, head_dim=32)
+    if cfg.moe:
+        base["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
+            expert_ff=64, group_size=32, capacity_factor=2.0,
+            shared_expert_ff=(64 if cfg.moe.shared_expert_ff else 0))
+    if cfg.ssm:
+        base["ssm"] = dataclasses.replace(cfg.ssm, chunk_size=16)
+        base["attention"] = dataclasses.replace(
+            cfg.attention, num_heads=4, num_kv_heads=4, head_dim=64)
+    if cfg.rwkv:
+        base["rwkv"] = dataclasses.replace(cfg.rwkv, head_dim=32,
+                                           chunk_size=16)
+    if cfg.encdec:
+        base["encdec"] = dataclasses.replace(
+            cfg.encdec, encoder_layers=2, cross_kv_len=32)
+    base.update(kw)
+    return dataclasses.replace(cfg, **base)
+
+
+TINY_LAYERS = {
+    "gemma3-12b": 6,            # one 5:1 local:global pattern unit
+    "qwen2-0.5b": 2,
+    "deepseek-67b": 2,
+    "qwen2-72b": 2,
+    "pixtral-12b": 2,
+    "whisper-base": 2,
+    "zamba2-7b": 15,            # 2 units of [shared+5] + 3-layer tail
+    "llama4-maverick-400b-a17b": 4,
+    "qwen3-moe-235b-a22b": 2,
+    "rwkv6-1.6b": 2,
+}

@@ -1,0 +1,108 @@
+"""Unit tests for the analysis layer: HLO collective parser, analytic
+FLOPs/bytes models, roofline term math, piece composition."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.bytes_model import analytic_bytes
+from repro.analysis.flops import (active_param_count, model_flops,
+                                  param_count)
+from repro.analysis.hlo import (collective_stats, shape_bytes,
+                                summarize_compiled,
+                                total_collective_bytes)
+from repro.analysis.roofline import (compose_pieces, roofline_terms,
+                                     PEAK_FLOPS)
+from repro.configs import SHAPES, get_config
+
+
+def test_shape_bytes_parser():
+    assert shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert shape_bytes("f32[4096]") == 4096 * 4
+    assert shape_bytes("(f32[2,2], s8[16])") == 16 + 16
+    assert shape_bytes("pred[]") == 1
+
+
+def test_collective_stats_from_text():
+    txt = """
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[64,32]{1,0} all-gather(%y), dimensions={0}
+  %aa = f32[8,8]{1,0} all-to-all(%z), dimensions={0}
+  %nothing = f32[4]{0} add(%a, %b)
+"""
+    s = collective_stats(txt)
+    assert s["all-reduce"]["count"] == 1
+    assert s["all-reduce"]["bytes"] == 4096
+    assert s["all-gather"]["bytes"] == 64 * 32 * 2
+    assert "add" not in s
+    assert total_collective_bytes(s) == 4096 + 4096 + 256
+
+
+def test_summarize_compiled_real_program():
+    c = jax.jit(lambda x: (x @ x).sum()).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    rec = summarize_compiled(c)
+    assert rec["flops"] >= 2 * 64 ** 3 * 0.9
+    assert "memory" in rec and rec["memory"]["argument_bytes"] == 64*64*4
+
+
+def test_param_counts_sane():
+    cfg = get_config("qwen2-72b")
+    n = param_count(cfg)
+    assert 70e9 < n < 85e9, n            # ~72B + embeddings
+    assert active_param_count(cfg) == n  # dense: all params active
+    moe = get_config("qwen3-moe-235b-a22b")
+    n_tot, n_act = param_count(moe), active_param_count(moe)
+    assert 200e9 < n_tot < 260e9, n_tot
+    assert 15e9 < n_act < 30e9, n_act    # ~22B active
+
+
+def test_llama4_param_budget():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    n_tot, n_act = param_count(cfg), active_param_count(cfg)
+    assert 360e9 < n_tot < 440e9, n_tot   # ~400B as published
+    assert 10e9 < n_act < 25e9, n_act     # ~17B active
+
+
+def test_model_flops_regimes():
+    cfg = get_config("qwen2-0.5b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    de = model_flops(cfg, SHAPES["decode_32k"])
+    assert tr == pytest.approx(
+        6 * active_param_count(cfg) * 256 * 4096)
+    assert pf == pytest.approx(
+        2 * active_param_count(cfg) * 32 * 32768)
+    assert de == pytest.approx(2 * active_param_count(cfg) * 128)
+
+
+def test_roofline_terms_math():
+    t = roofline_terms(PEAK_FLOPS, 819e9, 50e9)   # 1s each
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    assert t["roofline_fraction"] == pytest.approx(1.0)
+    t = roofline_terms(PEAK_FLOPS, 2 * 819e9, 50e9)
+    assert t["dominant"] == "memory"
+    assert t["roofline_fraction"] == pytest.approx(0.5)
+
+
+def test_compose_pieces_multiplies():
+    recs = [{"multiplier": 10, "flops": 2.0, "bytes_accessed": 3.0,
+             "collective_bytes": 1.0},
+            {"multiplier": 1, "flops": 5.0, "bytes_accessed": 7.0,
+             "collective_bytes": 0.0}]
+    tot = compose_pieces(recs)
+    assert tot == {"flops": 25.0, "bytes_accessed": 37.0,
+                   "collective_bytes": 10.0}
+
+
+def test_analytic_bytes_regimes():
+    cfg = get_config("qwen2-72b")
+    tr = analytic_bytes(cfg, SHAPES["train_4k"])
+    de = analytic_bytes(cfg, SHAPES["decode_32k"])
+    de_tp = analytic_bytes(cfg, SHAPES["decode_32k"], weight_shards=16)
+    assert tr["total"] > de["total"]          # train moves more
+    # serving TP reads a 16x bigger weight shard per step
+    assert de_tp["weights"] == pytest.approx(16 * de["weights"])
+    # decode is weight/cache-dominated
+    assert (de["weights"] + de["kv_cache_read"]) / de["total"] > 0.5

@@ -1,0 +1,54 @@
+"""Elastic scaling: a checkpoint written under one mesh restores under
+a different device count (node-failure recovery path).  Subprocesses
+own their device counts (process-global in jax)."""
+import subprocess
+import sys
+
+_SAVE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.checkpoint.manager import CheckpointManager
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+w = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                   NamedSharding(mesh, P("data", "model")))
+cm = CheckpointManager(sys.argv[1])
+cm.save(7, {"w": w})
+print("SAVED")
+"""
+
+_RESTORE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.fault import elastic_remesh_plan
+plan = elastic_remesh_plan(len(jax.devices()), model_parallel=2)
+mesh = jax.make_mesh((plan["data"], plan["model"]), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+sh = {"w": NamedSharding(mesh, P("data", "model"))}
+cm = CheckpointManager(sys.argv[1])
+like = {"w": jnp.zeros((8, 8))}
+restored, step = cm.restore(like, shardings=sh)
+assert step == 7
+np.testing.assert_array_equal(np.asarray(restored["w"]),
+                              np.arange(64.0).reshape(8, 8))
+assert restored["w"].sharding.mesh.shape["model"] == 2
+print("RESTORED", plan)
+"""
+
+
+def test_checkpoint_survives_remesh(tmp_path):
+    d = str(tmp_path)
+    r1 = subprocess.run([sys.executable, "-c", _SAVE, d], cwd=".",
+                        capture_output=True, text=True, timeout=300)
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    r2 = subprocess.run([sys.executable, "-c", _RESTORE, d], cwd=".",
+                        capture_output=True, text=True, timeout=300)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "RESTORED" in r2.stdout

@@ -1,0 +1,102 @@
+"""Hypothesis property tests on the static-schedule system invariants:
+
+  * schedules are valid DAGs and interference-free by construction,
+  * work conservation: total MACs == m*k*n for any config/problem,
+  * any simulated execution <= WCET (the paper's compositionality claim),
+  * exact WCET <= closed-form bound,
+  * observed spread <= analytic jitter bound,
+  * determinism: same seed -> same cycles.
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.multivic_paper import (BASELINE_FAST, DUAL, HEXADECA,
+                                          OCTA, QUAD, MultiVicConfig,
+                                          VicunaConfig)
+from repro.core.scheduler import (MatmulProblem, build_matmul_schedule,
+                                  schedule_totals, spm_plan)
+from repro.core.simulator import simulate
+from repro.core.wcet import jitter_bound, wcet, wcet_closed_form
+
+CONFIGS = [BASELINE_FAST, DUAL, QUAD, OCTA, HEXADECA]
+
+hw_strategy = st.sampled_from(CONFIGS)
+size_strategy = st.sampled_from([64, 128, 256])
+
+
+@st.composite
+def problems(draw):
+    m = draw(size_strategy)
+    k = draw(size_strategy)
+    n = draw(size_strategy)
+    return MatmulProblem(m, k, n)
+
+
+@given(hw=hw_strategy, prob=problems())
+@settings(max_examples=25, deadline=None)
+def test_schedule_work_conservation(hw, prob):
+    sched = build_matmul_schedule(hw, prob, rows_per_transfer=4)
+    tot = schedule_totals(sched)
+    assert tot["macs"] == prob.macs
+
+
+@given(hw=hw_strategy, prob=problems(), seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_sim_never_exceeds_wcet(hw, prob, seed):
+    sched = build_matmul_schedule(hw, prob, rows_per_transfer=4)
+    t = simulate(sched, hw, seed=seed).total_cycles
+    w = wcet(sched, hw)
+    assert t <= w + 1e-6
+
+
+@given(hw=hw_strategy, prob=problems())
+@settings(max_examples=15, deadline=None)
+def test_wcet_below_closed_form(hw, prob):
+    sched = build_matmul_schedule(hw, prob, rows_per_transfer=4)
+    assert wcet(sched, hw) <= wcet_closed_form(hw=hw, sched=sched) + 1e-6
+
+
+@given(hw=hw_strategy, prob=problems(),
+       seeds=st.lists(st.integers(0, 2**16), min_size=3, max_size=6))
+@settings(max_examples=10, deadline=None)
+def test_spread_within_jitter_bound(hw, prob, seeds):
+    sched = build_matmul_schedule(hw, prob, rows_per_transfer=4)
+    ts = [simulate(sched, hw, seed=s).total_cycles for s in seeds]
+    assert max(ts) - min(ts) <= jitter_bound(sched) + 1e-6
+
+
+@given(hw=hw_strategy, seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_simulation_deterministic(hw, seed):
+    sched = build_matmul_schedule(hw, MatmulProblem(64, 64, 64))
+    a = simulate(sched, hw, seed=seed).total_cycles
+    b = simulate(sched, hw, seed=seed).total_cycles
+    assert a == b
+
+
+@given(hw=hw_strategy, prob=problems())
+@settings(max_examples=15, deadline=None)
+def test_spm_plan_always_fits(hw, prob):
+    plan = spm_plan(hw, prob, rows_per_transfer=4)
+    assert plan["fits"]
+    assert plan["bw"] >= plan["vl"]
+    # the chosen block really fits beside the double buffers
+    need = (prob.k * plan["bw"] + 2 * 4 * prob.k + 2 * 4 * plan["bw"]) * 4
+    assert need <= hw.data_spm_bytes
+
+
+def test_interference_freedom_validated():
+    sched = build_matmul_schedule(OCTA, MatmulProblem(64, 64, 64))
+    sched.validate_interference_freedom()
+    # corrupting a compute phase to touch another core's SPM must fail
+    import dataclasses
+    bad = dataclasses.replace(sched.phases[5], spm_core=99) \
+        if sched.phases[5].kind == "compute" else None
+    for i, p in enumerate(sched.phases):
+        if p.kind == "compute":
+            sched.phases[i] = dataclasses.replace(p, spm_core=99)
+            break
+    with pytest.raises(AssertionError):
+        sched.validate_interference_freedom()
