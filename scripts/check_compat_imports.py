@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Compat-seam lint: version-sensitive JAX symbols may only be touched
+inside src/repro/compat.py.
+
+Greps every .py file in the repo for direct references to
+  * the Pallas TPU compiler-params class (either spelling),
+  * the jax.sharding axis-type enum (attribute or from-import),
+  * shard_map imported from jax rather than repro.compat,
+and fails if any appear outside the allowlist.  Run directly or via
+tests/test_compat_lint.py (tier-1).
+
+The patterns below are built by string concatenation so this file does
+not flag itself.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Only repro.compat may touch the raw symbols.
+ALLOWLIST = {"src/repro/compat.py"}
+
+SCAN_DIRS = ("src", "tests", "scripts", "benchmarks", "examples")
+
+PATTERNS = [
+    ("Pallas TPU compiler params (use repro.compat.tpu_compiler_params)",
+     re.compile(r"\b(?:TPU)?Compiler" + r"Params\b")),
+    ("jax.sharding axis-type enum (use repro.compat.AxisType)",
+     re.compile(r"jax\.sharding\.Axis" + r"Type\b")),
+    ("axis-type enum from-import (use repro.compat.AxisType)",
+     re.compile(r"from\s+jax\.sharding\s+import\s+[^\n]*\bAxis"
+                + r"Type\b")),
+    ("shard_map from jax (use repro.compat.shard_map)",
+     re.compile(r"from\s+jax(?:\.experimental(?:\.shard_map)?)?\s+"
+                r"import\s+[^\n]*\bshard_" + r"map\b")),
+]
+
+
+def find_violations(root: pathlib.Path = REPO_ROOT):
+    violations = []
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if rel in ALLOWLIST:
+                continue
+            text = path.read_text(encoding="utf-8", errors="replace")
+            for lineno, line in enumerate(text.splitlines(), 1):
+                for why, pat in PATTERNS:
+                    if pat.search(line):
+                        violations.append((rel, lineno, why,
+                                           line.strip()))
+    return violations
+
+
+def main() -> int:
+    violations = find_violations()
+    for rel, lineno, why, line in violations:
+        print(f"{rel}:{lineno}: {why}\n    {line}")
+    if violations:
+        print(f"\n{len(violations)} compat violation(s); route these "
+              "through src/repro/compat.py", file=sys.stderr)
+        return 1
+    print("compat-import lint clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,8 @@ from typing import Dict
 
 import numpy as np
 
+from repro.compat import cost_analysis
+
 COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
                     "all-to-all", "collective-permute")
 
@@ -67,10 +69,10 @@ def summarize_compiled(compiled) -> Dict:
     """Extract a JSON-able record from a compiled executable."""
     rec = {}
     try:
-        ca = compiled.cost_analysis() or {}
-        rec["flops"] = float(ca.get("flops", 0.0))
-        rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
-        rec["transcendentals"] = float(ca.get("transcendentals", 0.0))
+        ca = cost_analysis(compiled)
+        rec["flops"] = ca.get("flops", 0.0)
+        rec["bytes_accessed"] = ca.get("bytes accessed", 0.0)
+        rec["transcendentals"] = ca.get("transcendentals", 0.0)
     except Exception as e:  # pragma: no cover
         rec["cost_error"] = repr(e)
     try:

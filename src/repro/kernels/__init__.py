@@ -1,3 +1,131 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel registry + conformance table.
+
+Each kernel directory ships <name>.py (the Pallas kernel), ops.py (the
+public wrapper with interpret auto-selection) and ref.py (the pure-jnp
+oracle).  ``conformance_cases()`` enumerates one deterministic
+(kernel, inputs) grid so the tier-1 harness
+(tests/kernel_conformance.py) can run EVERY registered kernel in
+interpret mode against its oracle under the shared tolerance policy —
+registering a kernel here is all a new kernel needs to get correctness
+coverage.
+
+Keep cases small: interpret mode executes the grid sequentially on CPU,
+so these are semantics checks, not perf runs (benchmarks/ owns timing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ConformanceCase:
+    """One kernel-vs-oracle check.
+
+    ``run_pair`` builds deterministic inputs and returns
+    ``(got, want)`` pytrees — got from the Pallas path forced into
+    interpret mode, want from the ref.py oracle in fp32.  ``tol``
+    overrides the per-dtype policy (conftest.KERNEL_TOLERANCES) for
+    kernels whose oracle uses a different accumulation order.
+    """
+    kernel: str
+    case_id: str
+    dtype: str
+    run_pair: Callable[[], Tuple[Any, Any]]
+    tol: Optional[float] = None
+
+    @property
+    def id(self) -> str:
+        return f"{self.kernel}-{self.case_id}"
+
+
+def _matmul_case(m, k, n, bm, bn, bk, dtype) -> ConformanceCase:
+    def run_pair():
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.spm_matmul.ops import matmul
+        from repro.kernels.spm_matmul.ref import matmul_ref
+        dt = jnp.dtype(dtype)
+        ka, kb = jax.random.split(jax.random.PRNGKey(m + n + k))
+        a = jax.random.normal(ka, (m, k), jnp.float32).astype(dt)
+        b = jax.random.normal(kb, (k, n), jnp.float32).astype(dt)
+        got = matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+        want = matmul_ref(a, b)
+        return got, want
+
+    return ConformanceCase(
+        kernel="spm_matmul", dtype=dtype, run_pair=run_pair,
+        case_id=f"{m}x{k}x{n}-b{bm}.{bn}.{bk}-{dtype}")
+
+
+def _flash_case(B, Sq, Sk, H, KV, D, causal, window, bq, bk,
+                dtype) -> ConformanceCase:
+    def run_pair():
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.flash_attention.ops import attention
+        from repro.kernels.flash_attention.ref import attention_ref
+        dt = jnp.dtype(dtype)
+        ks = jax.random.split(jax.random.PRNGKey(Sq + H + D), 3)
+        q = jax.random.normal(ks[0], (B, Sq, H, D),
+                              jnp.float32).astype(dt)
+        k = jax.random.normal(ks[1], (B, Sk, KV, D),
+                              jnp.float32).astype(dt)
+        v = jax.random.normal(ks[2], (B, Sk, KV, D),
+                              jnp.float32).astype(dt)
+        got = attention(q, k, v, causal=causal, window=window, bq=bq,
+                        bk=bk, interpret=True)
+        want = attention_ref(q.astype(jnp.float32),
+                             k.astype(jnp.float32),
+                             v.astype(jnp.float32), causal=causal,
+                             window=window)
+        return got, want
+
+    tag = "causal" if causal else "full"
+    if window:
+        tag += f"-w{window}"
+    return ConformanceCase(
+        kernel="flash_attention", dtype=dtype, run_pair=run_pair,
+        case_id=f"{B}x{Sq}x{H}kv{KV}d{D}-{tag}-{dtype}")
+
+
+def _wkv6_case(B, S, H, K, chunk, dtype) -> ConformanceCase:
+    def run_pair():
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.wkv6.ops import wkv
+        from repro.kernels.wkv6.ref import wkv6_ref
+        ks = jax.random.split(jax.random.PRNGKey(S + K), 5)
+        r = jax.random.normal(ks[0], (B, S, H, K)) * 0.5
+        k = jax.random.normal(ks[1], (B, S, H, K)) * 0.5
+        v = jax.random.normal(ks[2], (B, S, H, K)) * 0.5
+        w_log = -jnp.exp(
+            jax.random.normal(ks[3], (B, S, H, K)) * 0.8 - 2.0)
+        u = jax.random.normal(ks[4], (H, K)) * 0.3
+        got = wkv(r, k, v, w_log, u, chunk=chunk, interpret=True)
+        want = wkv6_ref(r, k, v, w_log, u)
+        return got, want
+
+    # chunked kernel vs sequential oracle: accumulation orders differ,
+    # so the fp32 policy tolerance is too tight — same bound the
+    # dedicated wkv6 tests use.
+    return ConformanceCase(
+        kernel="wkv6", dtype=dtype, run_pair=run_pair, tol=2e-3,
+        case_id=f"{B}x{S}x{H}x{K}-c{chunk}-{dtype}")
+
+
+def conformance_cases() -> List[ConformanceCase]:
+    return [
+        _matmul_case(128, 128, 128, 128, 128, 0, "float32"),
+        _matmul_case(128, 256, 128, 64, 128, 128, "float32"),
+        _matmul_case(128, 128, 256, 128, 128, 0, "bfloat16"),
+        _flash_case(1, 128, 128, 4, 2, 64, True, 0, 64, 64, "float32"),
+        _flash_case(1, 128, 128, 4, 4, 64, False, 0, 64, 64, "float32"),
+        _flash_case(1, 128, 128, 4, 2, 64, True, 32, 64, 64,
+                    "bfloat16"),
+        _wkv6_case(1, 64, 2, 32, 32, "float32"),
+        _wkv6_case(2, 64, 2, 64, 32, "float32"),
+    ]

@@ -1,19 +1,12 @@
 """jit'd public wrapper for the flash-attention kernel."""
 from __future__ import annotations
 
-import jax
-
+from repro.compat import resolve_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def attention(q, k, v, *, causal=True, window=0, scale=0.0, bq=256,
               bk=256, interpret=None):
-    if interpret is None:
-        interpret = not _on_tpu()
     return flash_attention(q, k, v, causal=causal, window=window,
                            scale=scale, bq=bq, bk=bk,
-                           interpret=interpret)
+                           interpret=resolve_interpret(interpret))

@@ -7,8 +7,7 @@ surprise.
 """
 from __future__ import annotations
 
-import jax
-
+from repro.compat import resolve_interpret
 from repro.core.tpu_mapping import V5E, TPUChip
 from repro.kernels.spm_matmul.spm_matmul import spm_matmul
 
@@ -22,16 +21,11 @@ def vmem_plan(m: int, k: int, n: int, bm: int, bn: int, bk: int = 0,
             "fits": need <= chip.vmem_bytes}
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 0,
            interpret=None):
     """Public entry point.  interpret=None auto-selects interpret mode
     off-TPU (CPU validation; see EXAMPLE.md)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     plan = vmem_plan(a.shape[0], a.shape[1], b.shape[1], bm, bn, bk,
                      a.dtype.itemsize)
     if not plan["fits"]:

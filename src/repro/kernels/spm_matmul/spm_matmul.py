@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _kernel_2d(a_ref, b_ref, o_ref):
     o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
@@ -69,7 +71,7 @@ def spm_matmul(a: jax.Array, b: jax.Array, *, bm: int = 256,
             ],
             out_specs=pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
             out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=tpu_compiler_params(
                 dimension_semantics=("parallel", "arbitrary")),
             interpret=interpret,
         )(a, b)
@@ -87,7 +89,7 @@ def spm_matmul(a: jax.Array, b: jax.Array, *, bm: int = 256,
         out_specs=pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(a, b)

@@ -1,16 +1,10 @@
 """jit'd public wrapper for the WKV6 chunk kernel."""
 from __future__ import annotations
 
-import jax
-
+from repro.compat import resolve_interpret
 from repro.kernels.wkv6.wkv6 import wkv6
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def wkv(r, k, v, w_log, u, *, chunk=128, interpret=None):
-    if interpret is None:
-        interpret = not _on_tpu()
-    return wkv6(r, k, v, w_log, u, chunk=chunk, interpret=interpret)
+    return wkv6(r, k, v, w_log, u, chunk=chunk,
+                interpret=resolve_interpret(interpret))

@@ -26,6 +26,7 @@ import traceback
 import jax
 
 from repro.analysis.hlo import summarize_compiled
+from repro.compat import cost_analysis
 from repro.configs import SHAPES, TrainConfig, get_config, supported_shapes
 from repro.configs.all_archs import ALL_ARCH_IDS
 from repro.launch.mesh import make_production_mesh
@@ -81,7 +82,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
             rec["compile_s"] = round(time.time() - t1, 2)
         print(compiled.memory_analysis())
-        ca = compiled.cost_analysis()
+        ca = cost_analysis(compiled)
         print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
         rec.update(summarize_compiled(compiled))
         rec["status"] = "ok"

@@ -9,7 +9,8 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
+
+from repro.compat import auto_axis_types, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,8 +19,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     is pure data parallelism (gradient all-reduce over DCN)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=auto_axis_types(len(axes)))
 
 
 def make_host_mesh():

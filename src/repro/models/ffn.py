@@ -161,10 +161,8 @@ def moe_ffn_ep(p: dict, x: jax.Array, m: MoEConfig, activation: str,
     x_sharding: the residual stream's NamedSharding (mesh + batch axes).
     """
     from jax.sharding import PartitionSpec as P
-    try:
-        from jax import shard_map
-    except ImportError:                      # older jax
-        from jax.experimental.shard_map import shard_map
+
+    from repro.compat import shard_map
 
     mesh = x_sharding.mesh
     batch_spec = (x_sharding.spec[0] if len(x_sharding.spec) else None)
@@ -238,9 +236,8 @@ def moe_ffn_ep(p: dict, x: jax.Array, m: MoEConfig, activation: str,
     ws = (p["we_gate"], p["we_up"], p["we_down"]) if has_up \
         else (p["we_gate"], p["we_down"])
     wspecs = (w_gd, w_gd, w_df) if has_up else (w_gd, w_df)
-    fn = shard_map(local_fn, mesh=mesh,
-                   in_specs=(in_x, P(None, None)) + wspecs,
-                   out_specs=in_x, check_vma=False)
+    fn = shard_map(local_fn, mesh, (in_x, P(None, None)) + wspecs,
+                   in_x)
     return fn(x, p["router"], *ws)
 
 

@@ -43,11 +43,9 @@ def compressed_grad_mean(grads: Any, mesh, axis: str = "pod") -> Any:
     stay under GSPMD (auto)."""
     if axis not in mesh.axis_names or mesh.shape[axis] == 1:
         return grads
-    try:
-        from jax import shard_map
-    except ImportError:                      # pragma: no cover
-        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     auto = frozenset(a for a in mesh.axis_names if a != axis)
 
@@ -55,8 +53,7 @@ def compressed_grad_mean(grads: Any, mesh, axis: str = "pod") -> Any:
         return jax.tree.map(partial(_compress_psum_leaf, axis=axis), g)
 
     spec = jax.tree.map(lambda _: P(), grads)
-    return shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
-                     auto=auto, check_vma=False)(grads)
+    return shard_map(fn, mesh, (spec,), spec, auto=auto)(grads)
 
 
 def quantize_roundtrip(g: jax.Array) -> jax.Array:

@@ -5,6 +5,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -12,6 +13,31 @@ from repro.configs import get_config  # noqa: E402
 from repro.models.lm import RunOptions  # noqa: E402
 
 TINY_OPTS = RunOptions(chunk_q=16, chunk_kv=16, loss_chunk=16, remat=False)
+
+# Shared kernel tolerance policy: one place decides how close a Pallas
+# kernel must track its ref.py oracle (relative max-abs error, scaled
+# by the oracle's magnitude).  Used by tests/kernel_conformance.py for
+# every registered kernel; per-case overrides exist only for kernels
+# whose oracle accumulates in a different order (see kernels/__init__).
+KERNEL_TOLERANCES = {
+    "float32": 1e-5,
+    "bfloat16": 3e-2,
+}
+
+
+def assert_kernel_close(got, want, dtype: str, tol: float = None):
+    tol = tol if tol is not None else KERNEL_TOLERANCES[dtype]
+    got_leaves = jax.tree.leaves(got)
+    want_leaves = jax.tree.leaves(want)
+    assert len(got_leaves) == len(want_leaves), \
+        (len(got_leaves), len(want_leaves))
+    for g, w in zip(got_leaves, want_leaves):
+        g = jnp.asarray(g, jnp.float32)
+        w = jnp.asarray(w, jnp.float32)
+        assert g.shape == w.shape, (g.shape, w.shape)
+        scale = float(jnp.max(jnp.abs(w))) + 1e-9
+        err = float(jnp.max(jnp.abs(g - w))) / scale
+        assert err < tol, f"rel err {err:.2e} >= {tol:.0e} ({dtype})"
 
 
 def tiny_cfg(name: str, **kw):

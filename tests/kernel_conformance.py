@@ -1,0 +1,34 @@
+"""Kernel-conformance harness: every kernel registered in
+``repro.kernels.conformance_cases()`` runs in interpret mode on CPU and
+must match its ref.py oracle under the shared tolerance policy
+(conftest.KERNEL_TOLERANCES).  One parametrization table covers all
+kernels — registering a new kernel is the only step needed to get
+coverage here.
+
+Collected as part of tier-1 via ``python_files`` in pyproject.toml.
+"""
+import pytest
+
+from conftest import assert_kernel_close
+from repro.kernels import conformance_cases
+
+CASES = conformance_cases()
+
+
+def test_registry_covers_all_kernel_dirs():
+    """Every kernel directory (<name>/ops.py + ref.py) has at least one
+    registered conformance case — a new kernel cannot silently ship
+    without oracle coverage."""
+    import pathlib
+
+    import repro.kernels as kpkg
+    root = pathlib.Path(kpkg.__file__).parent
+    dirs = {p.parent.name for p in root.glob("*/ref.py")}
+    registered = {c.kernel for c in CASES}
+    assert dirs == registered, (dirs, registered)
+
+
+@pytest.mark.parametrize("case", CASES, ids=[c.id for c in CASES])
+def test_kernel_matches_oracle(case):
+    got, want = case.run_pair()
+    assert_kernel_close(got, want, case.dtype, tol=case.tol)

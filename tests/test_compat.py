@@ -1,0 +1,169 @@
+"""Unit tests for the repro.compat version seam: each shim must resolve
+the right symbol under BOTH the old (jax 0.4.x) and new (jax >= 0.5)
+attribute layouts, exercised via synthetic module objects so the tests
+pass regardless of the installed JAX.
+
+Note: raw symbol names are built by concatenation — the compat-import
+lint (scripts/check_compat_imports.py) greps for the literal spellings.
+"""
+import types
+
+import pytest
+
+from repro import compat
+
+_OLD_CP = "TPUCompiler" + "Params"     # jax <= 0.4.x spelling
+_NEW_CP = "Compiler" + "Params"        # jax >= 0.5 spelling
+
+
+# ------------------------------------------------ compiler params class
+
+def _fake_pltpu(**attrs):
+    mod = types.SimpleNamespace()
+    for name, val in attrs.items():
+        setattr(mod, name, val)
+    return mod
+
+
+def test_resolves_old_compiler_params_layout():
+    class Old:
+        pass
+    mod = _fake_pltpu(**{_OLD_CP: Old})
+    assert compat._resolve_tpu_compiler_params_cls(mod) is Old
+
+
+def test_resolves_new_compiler_params_layout():
+    class New:
+        pass
+    mod = _fake_pltpu(**{_NEW_CP: New})
+    assert compat._resolve_tpu_compiler_params_cls(mod) is New
+
+
+def test_new_layout_wins_when_both_exist():
+    class Old:
+        pass
+
+    class New:
+        pass
+    mod = _fake_pltpu(**{_OLD_CP: Old, _NEW_CP: New})
+    assert compat._resolve_tpu_compiler_params_cls(mod) is New
+
+
+def test_missing_layout_raises():
+    with pytest.raises(AttributeError):
+        compat._resolve_tpu_compiler_params_cls(_fake_pltpu())
+
+
+def test_tpu_compiler_params_real_jax():
+    p = compat.tpu_compiler_params(
+        dimension_semantics=("parallel", "arbitrary"))
+    assert tuple(p.dimension_semantics) == ("parallel", "arbitrary")
+
+
+def test_tpu_compiler_params_drops_unknown_fields():
+    p = compat.tpu_compiler_params(
+        dimension_semantics=("arbitrary",),
+        some_future_field_this_jax_lacks=123)
+    assert tuple(p.dimension_semantics) == ("arbitrary",)
+
+
+# ------------------------------------------------------ mesh / AxisType
+
+def test_axis_type_has_auto():
+    assert hasattr(compat.AxisType, "Auto")
+    assert compat.auto_axis_types(3) == (compat.AxisType.Auto,) * 3
+
+
+def test_mesh_kwargs_old_signature_drops_axis_types():
+    old_sig = frozenset({"axis_shapes", "axis_names", "devices"})
+    kw = compat._mesh_kwargs(old_sig, compat.auto_axis_types(2), None)
+    assert kw == {}
+
+
+def test_mesh_kwargs_new_signature_passes_axis_types():
+    new_sig = frozenset({"axis_shapes", "axis_names", "devices",
+                         "axis_types"})
+    types_ = compat.auto_axis_types(2)
+    kw = compat._mesh_kwargs(new_sig, types_, None)
+    assert kw == {"axis_types": types_}
+
+
+def test_make_mesh_real_jax_single_device():
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape == {"data": 1, "model": 1}
+
+
+# -------------------------------------------------------- cost analysis
+
+def test_normalize_cost_analysis_old_list_shape():
+    raw = [{"flops": 10.0, "bytes accessed": 5.0, "utilization0{}": 1.0}]
+    ca = compat.normalize_cost_analysis(raw)
+    assert ca["flops"] == 10.0
+    assert ca["bytes accessed"] == 5.0
+
+
+def test_normalize_cost_analysis_new_dict_shape():
+    ca = compat.normalize_cost_analysis({"flops": 7, "transcendentals": 1})
+    assert ca == {"flops": 7.0, "transcendentals": 1.0}
+
+
+def test_normalize_cost_analysis_degenerate():
+    assert compat.normalize_cost_analysis(None) == {}
+    assert compat.normalize_cost_analysis([]) == {}
+    assert compat.normalize_cost_analysis({"weird": object()}) == {}
+
+
+def test_cost_analysis_real_compiled_program():
+    import jax
+    import jax.numpy as jnp
+    c = jax.jit(lambda x: (x @ x).sum()).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    ca = compat.cost_analysis(c)
+    assert ca.get("flops", 0.0) > 0.0
+
+
+# ---------------------------------------------------- interpret select
+
+def test_resolve_interpret_explicit_passthrough():
+    assert compat.resolve_interpret(True) is True
+    assert compat.resolve_interpret(False) is False
+
+
+def test_resolve_interpret_auto_off_tpu(monkeypatch):
+    monkeypatch.setattr(compat, "on_tpu", lambda: False)
+    assert compat.resolve_interpret(None) is True
+    monkeypatch.setattr(compat, "on_tpu", lambda: True)
+    assert compat.resolve_interpret(None) is False
+
+
+# ----------------------------------------------------------- shard_map
+
+def test_shard_map_kwargs_old_layout():
+    params = frozenset({"f", "mesh", "in_specs", "out_specs",
+                        "check_rep", "auto"})
+    kw = compat._shard_map_kwargs(params, check=False,
+                                  auto=frozenset({"data"}),
+                                  axis_names=("pod", "data"))
+    assert kw == {"check_rep": False, "auto": frozenset({"data"})}
+
+
+def test_shard_map_kwargs_new_layout():
+    params = frozenset({"f", "mesh", "in_specs", "out_specs",
+                        "check_vma", "axis_names"})
+    kw = compat._shard_map_kwargs(params, check=False,
+                                  auto=frozenset({"data"}),
+                                  axis_names=("pod", "data"))
+    assert kw == {"check_vma": False, "axis_names": {"pod"}}
+
+
+def test_shard_map_real_jax_runs():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    mesh = compat.make_mesh((1,), ("data",))
+    fn = compat.shard_map(lambda x: x * 2, mesh, (P("data"),),
+                          P("data"))
+    out = jax.jit(fn)(jnp.arange(4.0))
+    assert jnp.allclose(out, jnp.arange(4.0) * 2)

@@ -1,0 +1,38 @@
+"""Tier-1 enforcement of the compat seam: no module outside
+src/repro/compat.py may reference version-sensitive JAX symbols
+directly (scripts/check_compat_imports.py holds the patterns)."""
+import importlib.util
+import pathlib
+
+_SCRIPT = (pathlib.Path(__file__).resolve().parent.parent / "scripts"
+           / "check_compat_imports.py")
+
+
+def _load_linter():
+    spec = importlib.util.spec_from_file_location(
+        "check_compat_imports", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_no_direct_version_sensitive_imports():
+    linter = _load_linter()
+    violations = linter.find_violations()
+    msg = "\n".join(f"{rel}:{line}: {why}\n    {src}"
+                    for rel, line, why, src in violations)
+    assert not violations, f"compat seam violations:\n{msg}"
+
+
+def test_linter_catches_seeded_violation(tmp_path):
+    """The lint actually fires: a synthetic tree with a raw compiler-
+    params reference must be flagged."""
+    linter = _load_linter()
+    bad = tmp_path / "src" / "repro" / "kernels"
+    bad.mkdir(parents=True)
+    attr = "TPU" + "Compiler" + "Params"
+    (bad / "rogue.py").write_text(
+        f"from jax.experimental.pallas import tpu\np = tpu.{attr}()\n")
+    violations = linter.find_violations(tmp_path)
+    assert len(violations) == 1
+    assert violations[0][0] == "src/repro/kernels/rogue.py"

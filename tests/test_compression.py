@@ -3,7 +3,12 @@ mean correctness."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.optim.compression import quantize_roundtrip
 
@@ -34,17 +39,17 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import sys; sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
-from jax import shard_map
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import auto_axis_types, make_mesh, shard_map
 from repro.optim.compression import _compress_psum_leaf
-mesh = jax.make_mesh((2, 2), ("pod", "data"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 2), ("pod", "data"),
+                 axis_types=auto_axis_types(2))
 g = jnp.arange(-8.0, 8.0).reshape(4, 4) / 8.0
 stacked = jnp.stack([g, 3 * g])                  # [pod, ...]
 fn = shard_map(
     lambda x: _compress_psum_leaf(x[0], "pod")[None],
-    mesh=mesh, in_specs=(P("pod", None, None),),
-    out_specs=P("pod", None, None), check_vma=False)
+    mesh, (P("pod", None, None),),
+    P("pod", None, None))
 out = jax.jit(fn)(jax.device_put(
     stacked, NamedSharding(mesh, P("pod", None, None))))
 # both pods now hold the (identical) compressed mean

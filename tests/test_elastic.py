@@ -9,10 +9,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import sys; sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+from repro.compat import auto_axis_types, make_mesh
+mesh = make_mesh((2, 2), ("data", "model"),
+                 axis_types=auto_axis_types(2))
 w = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                    NamedSharding(mesh, P("data", "model")))
 cm = CheckpointManager(sys.argv[1])
@@ -25,12 +26,13 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 import sys; sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
+from repro.compat import auto_axis_types, make_mesh
 from repro.runtime.fault import elastic_remesh_plan
 plan = elastic_remesh_plan(len(jax.devices()), model_parallel=2)
-mesh = jax.make_mesh((plan["data"], plan["model"]), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((plan["data"], plan["model"]), ("data", "model"),
+                 axis_types=auto_axis_types(2))
 sh = {"w": NamedSharding(mesh, P("data", "model"))}
 cm = CheckpointManager(sys.argv[1])
 like = {"w": jnp.zeros((8, 8))}

@@ -6,7 +6,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from conftest import TINY_LAYERS, tiny_cfg
 from repro.configs.all_archs import ALL_ARCH_IDS

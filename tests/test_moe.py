@@ -3,7 +3,11 @@ dynamic behaviour' must hold structurally."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import MoEConfig
 from repro.models.ffn import _topk_dispatch, moe_ffn, moe_spec
@@ -80,12 +84,13 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import auto_axis_types, make_mesh
 from repro.configs.base import MoEConfig
 from repro.models.ffn import moe_ffn, moe_spec
 from repro.models.spec import init_tree
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"),
+                 axis_types=auto_axis_types(2))
 xs = NamedSharding(mesh, P("data", None, None))
 m = MoEConfig(num_experts=8, top_k=2, expert_ff=64, group_size=64,
               capacity_factor=8.0)

@@ -2,7 +2,11 @@
 properties (the paper's §4.3 'entire networks' extension)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.multivic_paper import DUAL, OCTA, QUAD
 from repro.core.network_scheduler import (build_network_schedule, mlp,

@@ -10,7 +10,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.multivic_paper import (BASELINE_FAST, DUAL, HEXADECA,
                                           OCTA, QUAD, MultiVicConfig,

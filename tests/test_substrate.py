@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import TrainConfig

@@ -1,6 +1,11 @@
 """The MultiVic -> TPU bridge: schedule validity, WCET ordering, VMEM
 feasibility — time-predictability carried to the target hardware."""
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.tpu_mapping import (V5E, tpu_matmul_schedule,
                                     tpu_steady_state, tpu_wcet)
