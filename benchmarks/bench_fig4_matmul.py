@@ -1,5 +1,9 @@
 """Paper Fig. 4: the matmul benchmark executed 100x per configuration —
 median execution cycles and standard deviation, plus the paper anchors.
+
+Each row also carries the full fluctuation summary (``jitter`` key:
+CoV, p99, spread, WCET margin — repro.obs.jitter) consumed by the
+``--json`` report sink; the CSV ``derived`` payload is unchanged.
 """
 import time
 
@@ -7,8 +11,9 @@ from repro.configs.multivic_paper import (EVAL_CONFIGS,
                                           PAPER_MEDIAN_CYCLES,
                                           PAPER_SECONDS)
 from repro.core.scheduler import MatmulProblem, build_matmul_schedule
-from repro.core.simulator import run_many
+from repro.core.simulator import sweep_cycles
 from repro.core.wcet import wcet
+from repro.obs.jitter import jitter_stats
 
 
 def run(n_runs: int = 100):
@@ -16,19 +21,21 @@ def run(n_runs: int = 100):
     for hw in EVAL_CONFIGS:
         t0 = time.time()
         sched = build_matmul_schedule(hw, MatmulProblem())
-        stats = run_many(sched, hw, n_runs=n_runs)
+        cycles = sweep_cycles(sched, hw, n_runs=n_runs)
         bound = wcet(sched, hw)
-        secs = stats["median"] / hw.fmax_hz
+        stats = jitter_stats(cycles, wcet_bound=bound)
+        secs = stats.median / hw.fmax_hz
         target = PAPER_MEDIAN_CYCLES.get(hw.name)
-        err = (stats["median"] / target - 1) if target else None
+        err = (stats.median / target - 1) if target else None
         rows.append({
             "name": f"fig4/{hw.name}",
             "us_per_call": (time.time() - t0) * 1e6 / n_runs,
             "derived": (
-                f"median_cycles={stats['median']:.0f};std={stats['std']:.0f};"
+                f"median_cycles={stats.median:.0f};std={stats.std:.0f};"
                 f"sec@fmax={secs:.3f};wcet={bound:.0f}"
                 + (f";paper={target};err={err:+.4%}" if target else "")
                 + (f";paper_sec={PAPER_SECONDS[hw.name]}"
                    if hw.name in PAPER_SECONDS else "")),
+            "jitter": stats.as_dict(),
         })
     return rows

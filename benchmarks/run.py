@@ -1,8 +1,14 @@
 """Benchmark harness — one module per paper table/figure plus the
 TPU-side roofline/dry-run reports.  Prints ``name,us_per_call,derived``
-CSV (assignment format).
+CSV (assignment format; byte-stable across PRs).
 
   PYTHONPATH=src python -m benchmarks.run [--fast]
+
+``--json PATH`` additionally writes a schema-versioned structured
+report (repro.obs.report): the CSV fields plus jitter statistics for
+the Fig. 4 fluctuation sweep and an environment fingerprint — the
+machine-readable BENCH trajectory.  ``--only k1,k2`` restricts the run
+to named suite entries (for tests/tooling; CSV format is unchanged).
 """
 import argparse
 import os
@@ -11,30 +17,62 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true",
-                    help="fewer Fig.4 simulation runs")
-    args, _ = ap.parse_known_args()
-
+def suite(fast: bool):
+    """Ordered (key, thunk) benchmark table."""
     from benchmarks import (bench_beyond_paper, bench_dryrun_summary,
                             bench_fig3_roofline, bench_fig4_matmul,
                             bench_fig5_resources, bench_kernels,
                             bench_table12_fmax, bench_tpu_roofline)
+    return [
+        ("table12", bench_table12_fmax.run),
+        ("fig3", bench_fig3_roofline.run),
+        ("fig4", lambda: bench_fig4_matmul.run(
+            n_runs=10 if fast else 100)),
+        ("fig5", bench_fig5_resources.run),
+        ("kernels", bench_kernels.run),
+        ("beyond", bench_beyond_paper.run),
+        ("tpu_roofline", bench_tpu_roofline.run),
+        ("dryrun", bench_dryrun_summary.run),
+    ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer Fig.4 simulation runs")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write a schema-versioned JSON report")
+    ap.add_argument("--only", metavar="KEYS", default=None,
+                    help="comma-separated suite keys (e.g. fig4,fig5)")
+    args, _ = ap.parse_known_args(argv)
+
+    entries = suite(args.fast)
+    if args.only:
+        want = {k.strip() for k in args.only.split(",") if k.strip()}
+        unknown = want - {k for k, _ in entries}
+        if unknown:
+            ap.error(f"unknown suite keys: {sorted(unknown)} "
+                     f"(have {[k for k, _ in entries]})")
+        entries = [(k, fn) for k, fn in entries if k in want]
 
     rows = []
-    rows += bench_table12_fmax.run()
-    rows += bench_fig3_roofline.run()
-    rows += bench_fig4_matmul.run(n_runs=10 if args.fast else 100)
-    rows += bench_fig5_resources.run()
-    rows += bench_kernels.run()
-    rows += bench_beyond_paper.run()
-    rows += bench_tpu_roofline.run()
-    rows += bench_dryrun_summary.run()
+    for _, fn in entries:
+        rows += fn()
 
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.2f},\"{r['derived']}\"")
+
+    if args.json:
+        import json
+
+        from repro.obs.report import make_report, validate_report
+        report = make_report(rows, fast=args.fast)
+        errs = validate_report(report)
+        assert not errs, errs
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2, sort_keys=False)
+        print(f"json report: {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

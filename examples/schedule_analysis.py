@@ -5,6 +5,11 @@ roofline + F_max + resource models — i.e. reproduce the paper's whole
 evaluation from the public API.
 
   PYTHONPATH=src python examples/schedule_analysis.py [--runs 20]
+                                                      [--trace DIR]
+
+``--trace DIR`` additionally dumps one seeded execution per design
+point as ``DIR/<name>.trace.json`` — open in chrome://tracing or
+Perfetto to see the static schedule as a per-resource Gantt chart.
 """
 import argparse
 import os
@@ -20,13 +25,19 @@ from repro.core import (MatmulProblem, build_matmul_schedule, run_many,
 from repro.core.fmax import predict_fmax_mhz
 from repro.core.resources import total_resources
 from repro.core.roofline import config_roofline
+from repro.core.simulator import simulate
+from repro.obs import TraceRecorder, write_chrome_trace
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--runs", type=int, default=20)
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="dump per-config Chrome traces into DIR")
     args = ap.parse_args()
     prob = MatmulProblem()
+    if args.trace:
+        os.makedirs(args.trace, exist_ok=True)
 
     for hw in EVAL_CONFIGS:
         plan = spm_plan(hw, prob)
@@ -60,6 +71,12 @@ def main():
               f"SPM {roof['spm_bw_gbs']:.2f} GB/s")
         print(f" resources: {res['lut']:.0f} LUT, {res['dsp']:.0f} DSP, "
               f"{res['bram']:.0f} BRAM")
+        if args.trace:
+            rec = TraceRecorder(time_unit="cycles")
+            simulate(sched, hw, seed=0, trace=rec)
+            path = os.path.join(args.trace, f"{hw.name}.trace.json")
+            write_chrome_trace(rec, path)
+            print(f" trace: {path} ({len(rec.spans)} spans)")
 
 
 if __name__ == "__main__":

@@ -35,7 +35,12 @@ class SimResult:
 def simulate(sched: Schedule, hw: MultiVicConfig,
              tp: TimingParams = DEFAULT_TIMING,
              seed: Optional[int] = None,
-             worst_case: bool = False) -> SimResult:
+             worst_case: bool = False,
+             trace=None) -> SimResult:
+    """Execute the schedule; when ``trace`` (a
+    ``repro.obs.trace.TraceRecorder``) is given, every phase is recorded
+    as a span on its resource's track with cycle timestamps — load the
+    Chrome-trace export to see the schedule as a Gantt chart."""
     rng = np.random.default_rng(seed if seed is not None else 0)
     n = len(sched.phases)
     finish = np.zeros(n, dtype=np.float64)
@@ -56,18 +61,32 @@ def simulate(sched: Schedule, hw: MultiVicConfig,
         finish[ph.pid] = end
         res_free[ph.resource] = end
         busy[ph.resource] = busy.get(ph.resource, 0.0) + dur
+        if trace is not None:
+            trace.add_span(ph.tag or f"{ph.kind}#{ph.pid}",
+                           track=ph.resource, start=start, end=end,
+                           cat=ph.kind, pid=ph.pid,
+                           bytes_moved=ph.bytes_moved, macs=ph.macs)
 
     return SimResult(total_cycles=float(finish.max() if n else 0.0),
                      per_resource_busy=busy, n_phases=n)
+
+
+def sweep_cycles(sched: Schedule, hw: MultiVicConfig, n_runs: int = 100,
+                 tp: TimingParams = DEFAULT_TIMING,
+                 seed0: int = 0) -> np.ndarray:
+    """Total cycles of ``n_runs`` seeded executions (seeds
+    ``seed0 .. seed0+n_runs-1``) — the sample vector behind both
+    ``run_many`` and ``repro.obs.jitter.simulate_sweep``."""
+    return np.array([
+        simulate(sched, hw, tp, seed=seed0 + i).total_cycles
+        for i in range(n_runs)])
 
 
 def run_many(sched: Schedule, hw: MultiVicConfig, n_runs: int = 100,
              tp: TimingParams = DEFAULT_TIMING, seed0: int = 0):
     """The paper's measurement protocol: run the benchmark n times,
     report median and standard deviation of execution cycles."""
-    cycles = np.array([
-        simulate(sched, hw, tp, seed=seed0 + i).total_cycles
-        for i in range(n_runs)])
+    cycles = sweep_cycles(sched, hw, n_runs=n_runs, tp=tp, seed0=seed0)
     return {
         "median": float(np.median(cycles)),
         "mean": float(cycles.mean()),

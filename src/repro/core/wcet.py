@@ -29,7 +29,17 @@ def wcet_closed_form(sched: Schedule, hw: MultiVicConfig,
         sum over serialized DMA worst cases
       + longest single compute chain (cores run concurrently)
     This over-approximates the exact bound (no overlap assumed between
-    the DMA stream and the slowest core's compute chain)."""
+    the DMA stream and the slowest core's compute chain).
+
+    Domain note: this form is valid for the schedules our schedulers
+    emit (compute phases depend only on DMA phases and earlier
+    same-core computes, and parallel cores carry balanced chains).  It
+    is NOT sound for arbitrary phase DAGs — a dependency chain can
+    weave core0-compute -> DMA -> core1-compute and accumulate compute
+    time from several cores, exceeding ``dma_total + longest_core``
+    (tests/test_timing_properties.py exercises exactly this with
+    randomized DAGs).  ``wcet_serial_bound`` is the always-sound
+    fallback."""
     dma_total = sum(phase_wcet(p, hw, tp) for p in sched.phases
                     if p.kind != "compute")
     per_core = {}
@@ -39,6 +49,19 @@ def wcet_closed_form(sched: Schedule, hw: MultiVicConfig,
                 + phase_wcet(p, hw, tp)
     longest_core = max(per_core.values()) if per_core else 0.0
     return dma_total + longest_core
+
+
+def wcet_serial_bound(sched: Schedule, hw: MultiVicConfig,
+                      tp: TimingParams = DEFAULT_TIMING) -> float:
+    """Full-serialization bound: the sum of every phase's worst case.
+
+    Sound for ANY well-formed phase DAG: list scheduling can only start
+    phases earlier than executing the list back-to-back, so by
+    induction ``finish(i) <= sum_{j<=i} wcet(j)``.  Much coarser than
+    ``wcet_closed_form`` (it grants no parallelism at all) but free of
+    that bound's structural assumptions — the outer slice of the
+    randomized-DAG WCET sandwich."""
+    return sum(phase_wcet(p, hw, tp) for p in sched.phases)
 
 
 def jitter_bound(sched: Schedule, tp: TimingParams = DEFAULT_TIMING):

@@ -17,7 +17,7 @@ from __future__ import annotations
 import signal
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 
 class PreemptionGuard:
@@ -45,7 +45,8 @@ class PreemptionGuard:
 class StragglerMonitor:
     threshold: float = 2.0          # x trailing mean
     alpha: float = 0.1              # EWMA factor
-    _mean: Optional[float] = None
+    trace: Optional[Any] = None     # obs.TraceRecorder: step_s counter
+    _mean: Optional[float] = None   # + straggler instants
     events: List[Tuple[int, float, float]] = field(default_factory=list)
     _t0: Optional[float] = None
 
@@ -58,6 +59,12 @@ class StragglerMonitor:
                         and dt > self.threshold * self._mean)
         if is_straggler:
             self.events.append((step, dt, self._mean))
+        if self.trace is not None:
+            self.trace.counter("step_s", dt)
+            if is_straggler:
+                self.trace.instant("straggler", track="trainer",
+                                   step=step, step_s=dt,
+                                   trailing_mean_s=self._mean)
         self._mean = (dt if self._mean is None
                       else (1 - self.alpha) * self._mean + self.alpha * dt)
         return is_straggler

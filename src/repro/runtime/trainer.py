@@ -40,13 +40,14 @@ class Trainer:
     opts: lm_mod.RunOptions = field(default_factory=lm_mod.RunOptions)
     log_every: int = 10
     on_metrics: Optional[Callable[[int, Dict], None]] = None
+    trace: Optional[Any] = None     # obs.TraceRecorder (wall-clock us)
 
     def __post_init__(self):
         self.dataset = SyntheticLMDataset(self.dcfg)
         self.ckpt = (CheckpointManager(self.ckpt_dir)
                      if self.ckpt_dir else None)
         self.guard = PreemptionGuard()
-        self.straggler = StragglerMonitor()
+        self.straggler = StragglerMonitor(trace=self.trace)
         self._step_fn = jax.jit(
             make_train_step(self.cfg, self.tcfg, self.opts),
             donate_argnums=(0, 1))
@@ -74,9 +75,15 @@ class Trainer:
         while state.step < num_steps:
             batch = self.dataset.batch_at(state.step)
             self.straggler.step_start()
+            if self.trace is not None:
+                self.trace.begin(f"step{state.step}", track="trainer",
+                                 cat="train_step", step=state.step)
             params, opt, metrics = self._step_fn(
                 state.params, state.opt_state, batch)
-            loss = float(metrics["loss"])
+            loss = float(metrics["loss"])   # blocks on device results
+            if self.trace is not None:
+                self.trace.end("trainer")
+                self.trace.counter("loss", loss)
             state = TrainerState(params, opt, state.step + 1)
             slow = self.straggler.step_end(state.step)
             history["loss"].append(loss)

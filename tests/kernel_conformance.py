@@ -5,14 +5,31 @@ must match its ref.py oracle under the shared tolerance policy
 kernels — registering a new kernel is the only step needed to get
 coverage here.
 
+Every case's wall-time is recorded as a span on the shared
+``RECORDER`` (track ``kernel_conformance``); set
+``REPRO_TRACE=/path/kernels.json`` to dump the Chrome trace after the
+session (repro.obs).
+
 Collected as part of tier-1 via ``python_files`` in pyproject.toml.
 """
+import os
+
 import pytest
 
 from conftest import assert_kernel_close
 from repro.kernels import conformance_cases
+from repro.obs import TraceRecorder, write_chrome_trace
 
 CASES = conformance_cases()
+RECORDER = TraceRecorder(time_unit="us")
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _dump_kernel_trace():
+    yield
+    path = os.environ.get("REPRO_TRACE")
+    if path and RECORDER.spans:
+        write_chrome_trace(RECORDER, path)
 
 
 def test_registry_covers_all_kernel_dirs():
@@ -30,5 +47,8 @@ def test_registry_covers_all_kernel_dirs():
 
 @pytest.mark.parametrize("case", CASES, ids=[c.id for c in CASES])
 def test_kernel_matches_oracle(case):
-    got, want = case.run_pair()
+    with RECORDER.span(case.id, track="kernel_conformance",
+                       cat="kernel", kernel=case.kernel,
+                       dtype=case.dtype):
+        got, want = case.run_pair()
     assert_kernel_close(got, want, case.dtype, tol=case.tol)

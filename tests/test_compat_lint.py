@@ -36,3 +36,30 @@ def test_linter_catches_seeded_violation(tmp_path):
     violations = linter.find_violations(tmp_path)
     assert len(violations) == 1
     assert violations[0][0] == "src/repro/kernels/rogue.py"
+
+
+def test_lint_scope_covers_benchmarks_and_obs():
+    """The seam guard must watch every directory that may grow JAX
+    code — in particular benchmarks/ and the src/repro/obs layer."""
+    linter = _load_linter()
+    assert set(linter.SCAN_DIRS) >= {"src", "tests", "scripts",
+                                     "benchmarks", "examples"}
+
+
+def test_linter_fires_in_benchmarks_and_obs(tmp_path):
+    """Seeded violations in benchmarks/ and src/repro/obs/ are both
+    caught — the new directories are inside the lint scope, so the
+    compat seam stays the only version-sensitive module."""
+    linter = _load_linter()
+    attr = "TPU" + "Compiler" + "Params"
+    bench = tmp_path / "benchmarks"
+    bench.mkdir(parents=True)
+    (bench / "rogue_bench.py").write_text(
+        f"import jax.experimental.pallas.tpu as t\np = t.{attr}()\n")
+    obs = tmp_path / "src" / "repro" / "obs"
+    obs.mkdir(parents=True)
+    (obs / "rogue_obs.py").write_text(
+        "from jax.experimental.shard_map import shard" + "_map\n")
+    violations = linter.find_violations(tmp_path)
+    assert {v[0] for v in violations} == {
+        "benchmarks/rogue_bench.py", "src/repro/obs/rogue_obs.py"}

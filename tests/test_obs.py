@@ -1,0 +1,251 @@
+"""Coverage for the predictability observatory (repro.obs):
+
+* TraceRecorder span begin/end nesting and accounting,
+* Chrome-trace JSON export round-trips through ``json.loads`` with the
+  required ``ph``/``ts``/``dur`` keys,
+* jitter_stats against a hand-computed fixture,
+* the structured benchmark report (make_report/validate_report) and
+  the ``benchmarks/run.py --json`` CLI path,
+* the wall-clock producers: StragglerMonitor and the Trainer step loop.
+"""
+import json
+import math
+import os
+import sys
+
+import pytest
+
+from repro.configs.multivic_paper import QUAD
+from repro.core.scheduler import MatmulProblem, build_matmul_schedule
+from repro.core.simulator import simulate
+from repro.obs import (TraceRecorder, jitter_stats, make_report,
+                       simulate_sweep, to_chrome_trace, validate_report,
+                       write_chrome_trace)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------------- recorder
+
+def test_spans_nest_correctly():
+    rec = TraceRecorder()
+    rec.begin("outer", track="t", t=0.0)
+    rec.begin("inner", track="t", t=1.0)
+    inner = rec.end(track="t", t=2.0)
+    outer = rec.end(track="t", t=5.0)
+    assert inner.name == "inner" and outer.name == "outer"
+    assert outer.start <= inner.start and inner.end <= outer.end
+    assert rec.open_spans == 0
+    assert rec.busy()["t"] == pytest.approx(1.0 + 5.0)
+
+
+def test_end_without_begin_raises():
+    rec = TraceRecorder()
+    with pytest.raises(ValueError):
+        rec.end(track="nope")
+
+
+def test_span_context_manager_wall_clock():
+    rec = TraceRecorder()
+    with rec.span("work", track="main", cat="test", k=1):
+        with rec.span("sub", track="main"):
+            pass
+    assert [s.name for s in rec.spans] == ["sub", "work"]
+    sub, work = rec.spans
+    assert work.start <= sub.start <= sub.end <= work.end
+    assert dict(work.args) == {"k": 1}
+
+
+def test_independent_tracks_do_not_interfere():
+    rec = TraceRecorder()
+    rec.begin("a", track="dma", t=0.0)
+    rec.begin("b", track="core0", t=1.0)
+    rec.end(track="dma", t=4.0)
+    rec.end(track="core0", t=2.0)
+    assert rec.busy() == {"dma": 4.0, "core0": 1.0}
+    assert rec.tracks() == ["core0", "dma"]
+
+
+# --------------------------------------------------------- chrome trace
+
+def _sample_recorder():
+    rec = TraceRecorder(time_unit="cycles")
+    rec.add_span("phase0", track="dma", start=0.0, end=10.0,
+                 cat="dma_load", pid=0)
+    rec.add_span("phase1", track="core0", start=10.0, end=30.0,
+                 cat="compute", pid=1)
+    rec.counter("loss", 1.5, t=5.0)
+    rec.instant("straggler", track="core0", t=20.0, step=3)
+    return rec
+
+
+def test_chrome_trace_round_trips_with_required_keys(tmp_path):
+    rec = _sample_recorder()
+    path = write_chrome_trace(rec, str(tmp_path / "trace.json"))
+    doc = json.loads(open(path, encoding="utf-8").read())
+    assert doc["otherData"]["time_unit"] == "cycles"
+    events = doc["traceEvents"]
+    complete = [e for e in events if e["ph"] == "X"]
+    assert len(complete) == 2
+    for e in complete:
+        for key in ("ph", "ts", "dur", "name", "pid", "tid", "cat"):
+            assert key in e, key
+    assert {e["ph"] for e in events} == {"M", "X", "C", "i"}
+    names = {e["args"]["name"] for e in events if e["ph"] == "M"}
+    assert {"dma", "core0"} <= names
+    dur = {e["name"]: e["dur"] for e in complete}
+    assert dur == {"phase0": 10.0, "phase1": 20.0}
+
+
+def test_simulator_trace_exports_loadable_chrome_json(tmp_path):
+    sched = build_matmul_schedule(QUAD, MatmulProblem(8, 64, 64))
+    rec = TraceRecorder(time_unit="cycles")
+    res = simulate(sched, QUAD, seed=3, trace=rec)
+    path = write_chrome_trace(rec, str(tmp_path / "sim.json"))
+    doc = json.loads(open(path, encoding="utf-8").read())
+    complete = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(complete) == res.n_phases
+    assert max(e["ts"] + e["dur"] for e in complete) == pytest.approx(
+        res.total_cycles)
+    cats = {e["cat"] for e in complete}
+    assert cats <= {"dma_load", "dma_store", "compute"}
+
+
+# --------------------------------------------------------------- jitter
+
+def test_jitter_stats_hand_computed_fixture():
+    # samples chosen so every metric is checkable by hand
+    s = jitter_stats([10.0, 12.0, 11.0, 17.0], wcet_bound=20.0)
+    assert s.n == 4
+    assert s.mean == pytest.approx(12.5)
+    assert s.median == pytest.approx(11.5)
+    assert s.std == pytest.approx(math.sqrt(7.25))
+    assert s.min == 10.0 and s.max == 17.0
+    assert s.spread == pytest.approx(7.0)
+    # numpy linear-interpolation percentile: 12 + 0.97 * (17 - 12)
+    assert s.p99 == pytest.approx(16.85)
+    assert s.cov == pytest.approx(math.sqrt(7.25) / 12.5)
+    assert s.wcet_margin == pytest.approx(20.0 / 17.0)
+    d = s.as_dict()
+    assert set(d) == {"n", "mean", "median", "std", "min", "max",
+                      "spread", "p99", "cov", "wcet_margin"}
+
+
+def test_jitter_stats_rejects_empty():
+    with pytest.raises(ValueError):
+        jitter_stats([])
+
+
+def test_simulate_sweep_margin_holds_and_is_seeded():
+    sched = build_matmul_schedule(QUAD, MatmulProblem(8, 64, 64))
+    a = simulate_sweep(sched, QUAD, n_runs=16, seed0=0)
+    b = simulate_sweep(sched, QUAD, n_runs=16, seed0=0)
+    assert a == b                       # frozen dataclass, same seeds
+    assert a.wcet_margin is not None and a.wcet_margin >= 1.0
+    assert a.spread >= 0 and a.cov >= 0
+
+
+# --------------------------------------------------------------- report
+
+def _rows():
+    sched = build_matmul_schedule(QUAD, MatmulProblem(8, 64, 64))
+    j = simulate_sweep(sched, QUAD, n_runs=4)
+    return [
+        {"name": "fig4/quad", "us_per_call": 12.0,
+         "derived": "median_cycles=1", "jitter": j.as_dict()},
+        {"name": "table12/quad", "us_per_call": 1.0, "derived": "x=1"},
+    ]
+
+
+def test_report_validates_and_round_trips(tmp_path):
+    rep = make_report(_rows(), fast=True)
+    assert validate_report(rep) == []
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(rep))
+    back = json.loads(path.read_text())
+    assert validate_report(back) == []
+    assert back["schema_version"] == 1
+    assert back["hw_fingerprint"]["paper_configs_sha256"]
+    assert "jitter" in back["benchmarks"][0]
+    assert "jitter" not in back["benchmarks"][1]
+
+
+def test_report_validation_catches_corruption():
+    rep = make_report(_rows(), fast=False)
+    assert validate_report({"schema_version": 99})
+    bad = json.loads(json.dumps(rep))
+    del bad["benchmarks"][0]["us_per_call"]
+    assert any("us_per_call" in e for e in validate_report(bad))
+    bad2 = json.loads(json.dumps(rep))
+    del bad2["benchmarks"][0]["jitter"]["cov"]
+    assert any("cov" in e for e in validate_report(bad2))
+
+
+def test_benchmarks_run_json_cli(tmp_path, capsys):
+    """The actual --json CLI path on a cheap suite subset: CSV stdout
+    format unchanged, report file schema-valid."""
+    sys.path.insert(0, REPO_ROOT)
+    try:
+        from benchmarks import run as bench_run
+    finally:
+        sys.path.remove(REPO_ROOT)
+    out = tmp_path / "bench.json"
+    bench_run.main(["--fast", "--json", str(out),
+                    "--only", "table12,fig5"])
+    stdout = capsys.readouterr().out
+    lines = stdout.strip().splitlines()
+    assert lines[0] == "name,us_per_call,derived"
+    assert all(line.count(",") >= 2 for line in lines[1:])
+    doc = json.loads(out.read_text())
+    assert validate_report(doc) == []
+    assert doc["fast"] is True
+    assert {b["name"].split("/")[0] for b in doc["benchmarks"]} == \
+        {"table12", "fig5a", "fig5b"}
+
+
+# ------------------------------------------------- wall-clock producers
+
+def test_straggler_monitor_feeds_trace(monkeypatch):
+    from repro.runtime import fault
+
+    clock = iter([0.0, 0.1,        # step 1: 0.1 s
+                  1.0, 1.1,        # step 2: 0.1 s
+                  2.0, 3.0])       # step 3: 1.0 s -> straggler
+    monkeypatch.setattr(fault.time, "monotonic", lambda: next(clock))
+    rec = TraceRecorder()
+    mon = fault.StragglerMonitor(trace=rec)
+    for step in (1, 2):
+        mon.step_start()
+        assert mon.step_end(step) is False
+    mon.step_start()
+    assert mon.step_end(3) is True
+    assert [c.value for c in rec.counters] == \
+        pytest.approx([0.1, 0.1, 1.0])
+    assert [i.name for i in rec.instants] == ["straggler"]
+    assert dict(rec.instants[0].args)["step"] == 3
+
+
+def test_trainer_step_loop_records_spans():
+    from conftest import tiny_cfg
+    from repro.configs.base import TrainConfig
+    from repro.data.pipeline import DataConfig
+    from repro.models.lm import RunOptions
+    from repro.runtime.trainer import Trainer
+
+    cfg = tiny_cfg("qwen2-0.5b", num_layers=1, d_model=32, d_ff=64,
+                   vocab_size=64, vocab_pad_multiple=64)
+    tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=2,
+                       total_steps=3, seed=0)
+    dcfg = DataConfig(vocab_size=64, global_batch=4, seq_len=16)
+    opts = RunOptions(chunk_q=16, chunk_kv=16, loss_chunk=16,
+                      remat=False)
+    rec = TraceRecorder()
+    tr = Trainer(cfg, tcfg, dcfg, opts=opts, log_every=0, trace=rec)
+    tr.run(3)
+    steps = rec.spans_on("trainer")
+    assert [s.name for s in steps] == ["step0", "step1", "step2"]
+    assert all(s.cat == "train_step" and s.dur >= 0 for s in steps)
+    assert rec.open_spans == 0
+    losses = [c for c in rec.counters if c.name == "loss"]
+    step_s = [c for c in rec.counters if c.name == "step_s"]
+    assert len(losses) == 3 and len(step_s) == 3

@@ -1,0 +1,41 @@
+"""Repo hygiene, enforced as tier-1: compiled artifacts must never be
+tracked (PR 6 accidentally committed ``__pycache__/*.pyc``; this keeps
+that from recurring) and the ignore rules that prevent it must stay in
+place — while BENCH_*.json perf reports remain trackable so the perf
+trajectory persists across PRs.
+"""
+import pathlib
+import subprocess
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _git_ls_files():
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=REPO_ROOT,
+                             capture_output=True, text=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip(f"not a git checkout: {out.stderr.strip()}")
+    return out.stdout.splitlines()
+
+
+def test_no_compiled_artifacts_tracked():
+    tracked = _git_ls_files()
+    bad = [f for f in tracked
+           if f.endswith(".pyc") or "__pycache__" in f.split("/")]
+    assert not bad, f"compiled artifacts tracked in git: {bad}"
+
+
+def test_gitignore_covers_cache_dirs_but_not_bench_reports():
+    gi = (REPO_ROOT / ".gitignore").read_text(encoding="utf-8")
+    rules = {line.strip() for line in gi.splitlines()
+             if line.strip() and not line.startswith("#")}
+    for pattern in ("__pycache__/", "*.pyc", ".pytest_cache/"):
+        assert pattern in rules, f".gitignore missing {pattern!r}"
+    # the perf trajectory must stay committable
+    assert not any("BENCH" in r for r in rules), \
+        "BENCH_*.json reports must not be git-ignored"

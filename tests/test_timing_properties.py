@@ -1,0 +1,125 @@
+"""Hypothesis properties over *randomized schedule IR* (not just the
+matmul scheduler's output): the WCET sandwich
+
+    simulate(s, any seed)  <=  wcet(s)  <=  wcet_serial_bound(s)
+
+must hold for every well-formed phase DAG, and the worst-case
+evaluation must be seed-invariant — the compositionality invariant
+documented in core/wcet.py, strengthened here to arbitrary DAG shapes,
+resource mixes, and dependency patterns.
+
+The outer slice deliberately uses ``wcet_serial_bound``, not
+``wcet_closed_form``: randomized DAGs can weave a dependency chain
+core0 -> DMA -> core1 and beat ``dma_total + longest_core`` (found by
+fuzzing exactly this property — see the domain note in core/wcet.py).
+The closed form keeps its own sandwich below, restricted to the
+scheduler-emitted class it is documented for.
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs.multivic_paper import (DUAL, HEXADECA,  # noqa: E402
+                                          OCTA, QUAD)
+from repro.core.schedule import DMA, Schedule, core_resource  # noqa: E402
+from repro.core.scheduler import (MatmulProblem,  # noqa: E402
+                                  build_matmul_schedule)
+from repro.core.simulator import simulate  # noqa: E402
+from repro.core.wcet import (jitter_bound, wcet,  # noqa: E402
+                             wcet_closed_form, wcet_serial_bound)
+from repro.obs import TraceRecorder  # noqa: E402
+
+
+@st.composite
+def schedules(draw):
+    """A random well-formed phase DAG: mixed DMA/compute phases on up
+    to 4 cores, dependencies only on earlier phases."""
+    n = draw(st.integers(min_value=1, max_value=25))
+    n_cores = draw(st.integers(min_value=1, max_value=4))
+    sched = Schedule(meta={"random": True})
+    for pid in range(n):
+        deps = tuple(sorted(draw(st.sets(
+            st.integers(0, pid - 1), max_size=3)))) if pid else ()
+        kind = draw(st.sampled_from(["dma_load", "dma_store", "compute"]))
+        if kind == "compute":
+            core = draw(st.integers(0, n_cores - 1))
+            sched.add(kind=kind, resource=core_resource(core),
+                      deps=deps, spm_core=core,
+                      vec_chunks=draw(st.integers(0, 64)),
+                      elems=draw(st.integers(0, 32)),
+                      macs=draw(st.integers(0, 1 << 20)),
+                      tag=f"c{pid}")
+        else:
+            sched.add(kind=kind, resource=DMA, deps=deps,
+                      bytes_moved=draw(st.integers(0, 1 << 16)),
+                      tag=f"d{pid}")
+    sched.validate_dag()
+    sched.validate_interference_freedom()
+    return sched
+
+
+@given(sched=schedules(), seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_wcet_sandwich_random_dags(sched, seed):
+    t = simulate(sched, OCTA, seed=seed).total_cycles
+    w = wcet(sched, OCTA)
+    assert t <= w + 1e-6
+    assert w <= wcet_serial_bound(sched, OCTA) + 1e-6
+
+
+@given(hw=st.sampled_from([DUAL, QUAD, OCTA, HEXADECA]),
+       m=st.sampled_from([8, 16, 32]),
+       k=st.sampled_from([64, 128, 256]),
+       n=st.sampled_from([64, 128, 256]),
+       seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_wcet_sandwich_scheduler_class(hw, m, k, n, seed):
+    """On scheduler-emitted schedules the closed form slots between
+    the exact bound and full serialization:
+    sim <= wcet <= closed_form <= serial."""
+    sched = build_matmul_schedule(hw, MatmulProblem(m, k, n))
+    t = simulate(sched, hw, seed=seed).total_cycles
+    w = wcet(sched, hw)
+    cf = wcet_closed_form(sched, hw)
+    assert t <= w + 1e-6
+    assert w <= cf + 1e-6
+    assert cf <= wcet_serial_bound(sched, hw) + 1e-6
+
+
+@given(sched=schedules(),
+       seed_a=st.integers(0, 2**32 - 1), seed_b=st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_worst_case_is_seed_invariant(sched, seed_a, seed_b):
+    wa = simulate(sched, OCTA, seed=seed_a, worst_case=True)
+    wb = simulate(sched, OCTA, seed=seed_b, worst_case=True)
+    assert wa.total_cycles == wb.total_cycles
+    assert wa.per_resource_busy == wb.per_resource_busy
+    # and it IS the exact WCET, by definition
+    assert wa.total_cycles == wcet(sched, OCTA)
+
+
+@given(sched=schedules(),
+       seeds=st.lists(st.integers(0, 2**16), min_size=2, max_size=5))
+@settings(max_examples=25, deadline=None)
+def test_spread_within_jitter_bound_random_dags(sched, seeds):
+    ts = [simulate(sched, OCTA, seed=s).total_cycles for s in seeds]
+    assert max(ts) - min(ts) <= jitter_bound(sched) + 1e-6
+
+
+@given(sched=schedules(), seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_trace_is_faithful_to_sim_accounting(sched, seed):
+    """The observability layer must not disagree with the simulator:
+    span count == phase count, per-track busy == per-resource busy,
+    and no span may end after total_cycles."""
+    rec = TraceRecorder(time_unit="cycles")
+    res = simulate(sched, OCTA, seed=seed, trace=rec)
+    assert len(rec.spans) == res.n_phases
+    busy = rec.busy()
+    assert set(busy) == set(res.per_resource_busy)
+    for k, v in res.per_resource_busy.items():
+        assert busy[k] == pytest.approx(v, rel=1e-12, abs=1e-9)
+    assert all(s.end <= res.total_cycles + 1e-9 for s in rec.spans)
