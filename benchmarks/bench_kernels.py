@@ -1,72 +1,93 @@
-"""Kernel micro-benchmarks: interpret-mode CPU timing (correctness
-path) + the TPU-target analytic time from the static-schedule WCET
-model (what the BlockSpec schedule promises on the real part)."""
-import time
+"""Kernel micro-benchmarks with a tuned-vs-default comparison.
 
-import jax
-import jax.numpy as jnp
+Every registered kernel (repro.kernels.KERNEL_REGISTRY) is timed twice
+on its benchmark problem (repro.tuning.DEFAULT_PROBLEMS): once with
+the shape-safe default block plan and once with the autotuned plan
+(repro.tuning.tune — measured on a cold plan cache, reused with zero
+measurements on a warm one).  The row's ``us_per_call`` is the tuned
+time; ``derived`` carries both sides (``default_us``/``tuned_us``,
+``default_cov``/``tuned_cov``) plus the winning plan and the
+TPU-target analytic bound from the static-schedule WCET model, and the
+``jitter`` block holds the tuned plan's full fluctuation stats.
 
+Interpret-mode CPU timing (the correctness path): absolute numbers are
+not TPU numbers, but the tuned-vs-default delta and the CoV are what
+the bench trajectory gates on (scripts/bench_diff.py).
+"""
 from repro.core.tpu_mapping import (tpu_matmul_schedule, tpu_steady_state,
                                     tpu_wcet)
 
+# CoV needs a real sample: n=5 gives ~±0.02 noise on the estimate,
+# which would swamp the tuned-vs-default predictability comparison.
+REPS = 12
+WARMUP = 2
 
-def _time(fn, *args, reps=3):
-    fn(*args)                      # compile
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6
+
+def _compare(kernel, problem):
+    """(default_plan, default_stats, tune_result, tuned_stats)."""
+    from repro.tuning import (defaults_for, make_runner,
+                              measure_callable, tune)
+    default_plan = defaults_for(kernel, problem)
+    res = tune(kernel, problem, reps=REPS, warmup=WARMUP)
+    d_stats = measure_callable(
+        make_runner(kernel, problem, default_plan),
+        reps=REPS, warmup=WARMUP)
+    if res.plan == default_plan:
+        # identical program: re-measuring would only add noise
+        t_stats = d_stats
+    else:
+        t_stats = measure_callable(
+            make_runner(kernel, problem, res.plan),
+            reps=REPS, warmup=WARMUP)
+    return default_plan, d_stats, res, t_stats
+
+
+def _row(name, extra, default_plan, d_stats, res, t_stats):
+    from repro.tuning import plan_sig
+    derived = (f"{extra}"
+               f"default_plan={plan_sig(default_plan)};"
+               f"tuned_plan={plan_sig(res.plan)};"
+               f"plan_source={res.source};"
+               f"default_us={d_stats.mean:.1f};"
+               f"tuned_us={t_stats.mean:.1f};"
+               f"default_cov={d_stats.cov:.4f};"
+               f"tuned_cov={t_stats.cov:.4f};"
+               f"interpret=True")
+    return {"name": name, "us_per_call": t_stats.mean,
+            "derived": derived, "jitter": t_stats.as_dict()}
 
 
 def run():
+    from repro.tuning import DEFAULT_PROBLEMS
     rows = []
-    key = jax.random.PRNGKey(0)
 
-    # spm_matmul
-    from repro.kernels.spm_matmul.ops import matmul
-    m = k = n = 512
-    a = jax.random.normal(key, (m, k), jnp.float32)
-    b = jax.random.normal(key, (k, n), jnp.float32)
-    us = _time(lambda x, y: matmul(x, y, bm=256, bn=256), a, b)
-    sched = tpu_matmul_schedule(m, k, n, tile_m=256, tile_n=256,
-                                elem_bytes=4)
-    rows.append({
-        "name": "kernel/spm_matmul_512",
-        "us_per_call": us,
-        "derived": (f"tpu_wcet_us={tpu_wcet(sched)*1e6:.2f};"
-                    f"tpu_steady_us={tpu_steady_state(sched)*1e6:.2f};"
-                    f"interpret=True"),
-    })
+    # spm_matmul — static-schedule WCET bound built from the TUNED tile
+    # plan, so the analytic promise tracks what actually runs.
+    p = DEFAULT_PROBLEMS["spm_matmul"]
+    default_plan, d_stats, res, t_stats = _compare("spm_matmul", p)
+    sched = tpu_matmul_schedule(
+        p.m, p.k, p.n, tile_m=min(res.plan["bm"], p.m),
+        tile_n=min(res.plan["bn"], p.n), elem_bytes=4)
+    extra = (f"tpu_wcet_us={tpu_wcet(sched)*1e6:.2f};"
+             f"tpu_steady_us={tpu_steady_state(sched)*1e6:.2f};")
+    rows.append(_row(f"kernel/spm_matmul_{p.m}", extra,
+                     default_plan, d_stats, res, t_stats))
 
     # flash attention
-    from repro.kernels.flash_attention.ops import attention
-    B, S, H, KV, D = 1, 256, 4, 2, 64
-    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
-    kk = jax.random.normal(key, (B, S, KV, D), jnp.float32)
-    v = jax.random.normal(key, (B, S, KV, D), jnp.float32)
-    us = _time(lambda *xs: attention(*xs, bq=128, bk=128), q, kk, v)
-    flops = 4 * B * H * S * S * D / 2          # causal
-    rows.append({
-        "name": "kernel/flash_attn_256",
-        "us_per_call": us,
-        "derived": (f"tpu_compute_us={flops/197e12*1e6:.3f};"
-                    f"interpret=True"),
-    })
+    a = DEFAULT_PROBLEMS["flash_attention"]
+    default_plan, d_stats, res, t_stats = _compare("flash_attention", a)
+    flops = 4 * a.batch * a.heads * a.seq_q * a.seq_k * a.head_dim / 2
+    extra = f"tpu_compute_us={flops/197e12*1e6:.3f};"
+    rows.append(_row(f"kernel/flash_attn_{a.seq_q}", extra,
+                     default_plan, d_stats, res, t_stats))
 
     # wkv6
-    from repro.kernels.wkv6.ops import wkv
-    B, S, H, K = 1, 256, 2, 64
-    r = jax.random.normal(key, (B, S, H, K)) * 0.5
-    kx = jax.random.normal(key, (B, S, H, K)) * 0.5
-    vx = jax.random.normal(key, (B, S, H, K)) * 0.5
-    w = -jnp.exp(jax.random.normal(key, (B, S, H, K)) * 0.5 - 2)
-    u = jax.random.normal(key, (H, K)) * 0.3
-    us = _time(lambda *xs: wkv(*xs, chunk=64), r, kx, vx, w, u)
-    chunk_flops = B * H * (S / 64) * (64 * 64 * K * 3 + 64 * K * K * 2)
-    rows.append({
-        "name": "kernel/wkv6_256",
-        "us_per_call": us,
-        "derived": (f"tpu_compute_us={chunk_flops/197e12*1e6:.4f};"
-                    f"interpret=True"),
-    })
+    w = DEFAULT_PROBLEMS["wkv6"]
+    default_plan, d_stats, res, t_stats = _compare("wkv6", w)
+    L = res.plan["chunk"]
+    chunk_flops = w.batch * w.heads * (w.seq / L) \
+        * (L * L * w.key_dim * 3 + L * w.key_dim * w.key_dim * 2)
+    extra = f"tpu_compute_us={chunk_flops/197e12*1e6:.4f};"
+    rows.append(_row(f"kernel/wkv6_{w.seq}", extra,
+                     default_plan, d_stats, res, t_stats))
     return rows

@@ -1,0 +1,86 @@
+"""Autotuner walk-through: tune, cache, reuse.
+
+1. cold-tunes two kernels on small shapes — enumerate candidate block
+   plans, prune with the VMEM + roofline model, measure the survivors
+   under a TraceRecorder, select by the jitter-aware objective
+   (p99 latency, CoV tie-break),
+2. re-tunes the same problems: the persistent plan cache answers with
+   ZERO measurements (watch the span counts),
+3. calls the public kernel wrappers with no block arguments and shows
+   them picking the tuned plans up from the cache.
+
+Uses a throwaway cache under /tmp so it never touches your real
+~/.cache/repro/tuning_plans.json.
+
+  PYTHONPATH=src python examples/autotune_kernels.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# throwaway cache + autotuning on, BEFORE any repro import resolves it
+_cache_path = os.path.join(tempfile.mkdtemp(prefix="repro_tune_"),
+                           "plans.json")
+os.environ["REPRO_PLAN_CACHE"] = _cache_path
+os.environ["REPRO_AUTOTUNE"] = "1"
+
+from repro import tuning
+from repro.obs import TraceRecorder
+from repro.tuning import (MatmulProblem, WkvProblem, cache_key,
+                          cost_summary, measurement_count, plan_sig,
+                          tune)
+
+PROBLEMS = [("spm_matmul", MatmulProblem(128, 128, 128)),
+            ("wkv6", WkvProblem(1, 64, 2, 32))]
+
+
+def main():
+    print(f"=== 1. cold tune (cache: {_cache_path}) ===")
+    trace = TraceRecorder()
+    for kernel, problem in PROBLEMS:
+        res = tune(kernel, problem, reps=3, warmup=1, interpret=True,
+                   trace=trace)
+        print(f"{kernel} {problem.sig}: plan={plan_sig(res.plan)} "
+              f"[{res.source}] candidates={res.candidates} "
+              f"feasible={res.feasible} measured={res.measured} "
+              f"p99_us={res.stats.p99:.1f} cov={res.stats.cov:.4f}")
+        model = cost_summary(kernel, problem, res.plan)
+        print(f"  model: {model['flops']/1e6:.1f} MFLOP, "
+              f"{model['bytes']/1e3:.0f} KB moved, "
+              f"{model['grid_steps']:.0f} grid steps, "
+              f"vmem {model['vmem_need']/1e3:.0f} KB")
+    print(f"cold measurement spans: {measurement_count(trace)}")
+
+    print("\n=== 2. warm tune: zero measurements ===")
+    trace2 = TraceRecorder()
+    for kernel, problem in PROBLEMS:
+        res = tune(kernel, problem, reps=3, interpret=True,
+                   trace=trace2)
+        print(f"{kernel}: plan={plan_sig(res.plan)} [{res.source}] "
+              f"measured={res.measured}")
+    print(f"warm measurement spans: {measurement_count(trace2)}")
+    assert measurement_count(trace2) == 0
+
+    print("\n=== 3. wrappers pick the tuned plans up ===")
+    import jax
+
+    from repro.kernels.spm_matmul.ops import matmul
+    p = PROBLEMS[0][1]
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(ka, (p.m, p.k))
+    b = jax.random.normal(kb, (p.k, p.n))
+    cache = tuning.active_cache()
+    hits0 = cache.hits
+    out = matmul(a, b, interpret=True)   # no block args passed
+    entry = cache.entry(cache_key("spm_matmul", p))
+    print(f"matmul({p.m}x{p.k}x{p.n}) -> {out.shape}, "
+          f"cache hits {hits0} -> {cache.hits}, "
+          f"cached plan {plan_sig(entry['plan'])} "
+          f"(tuned on {entry['env']['backend']})")
+    assert cache.hits == hits0 + 1
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Compare two BENCH_*.json reports and flag perf/predictability
+regressions (the bench-trajectory gate from ROADMAP).
+
+  PYTHONPATH=src python scripts/bench_diff.py OLD.json NEW.json
+
+Benchmarks are matched by name.  A row regresses when:
+
+- ``us_per_call`` grows more than ``--rel-tol`` (relative) AND more
+  than ``--abs-floor-us`` (absolute — micro-rows are noise-floored), or
+- ``jitter.p99`` grows the same way (both reports must carry the
+  jitter block), or
+- ``jitter.cov`` grows more than ``--cov-tol`` relative plus
+  ``--cov-abs`` absolute — the predictability gate: a speedup that
+  fluctuates more is still a regression.
+
+Exit codes: 0 = no regressions, 1 = regression(s), 2 = unreadable or
+schema-invalid input.  Rows present in only one report are listed but
+never fail the gate; differing environment fingerprints print a
+warning (cross-machine numbers are not comparable).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+EXIT_OK, EXIT_REGRESSION, EXIT_INVALID = 0, 1, 2
+
+
+def load_report(path: str) -> Optional[Dict[str, Any]]:
+    """Load + schema-validate; returns None (with stderr noise) on any
+    problem."""
+    from repro.obs.report import validate_report
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+        return None
+    errs = validate_report(doc)
+    if errs:
+        print(f"bench_diff: {path} is not a valid schema-v1 report:",
+              file=sys.stderr)
+        for e in errs:
+            print(f"  - {e}", file=sys.stderr)
+        return None
+    return doc
+
+
+def _grew(old: float, new: float, rel_tol: float,
+          abs_floor: float) -> bool:
+    return new > old * (1.0 + rel_tol) and (new - old) > abs_floor
+
+
+def compare(old: Dict[str, Any], new: Dict[str, Any], *,
+            rel_tol: float, abs_floor_us: float, cov_tol: float,
+            cov_abs: float) -> Tuple[List[str], List[str], List[str]]:
+    """-> (regressions, improvements, notes), each human-readable."""
+    old_by = {b["name"]: b for b in old["benchmarks"]}
+    new_by = {b["name"]: b for b in new["benchmarks"]}
+    regressions: List[str] = []
+    improvements: List[str] = []
+    notes: List[str] = []
+
+    for name in sorted(set(old_by) & set(new_by)):
+        o, n = old_by[name], new_by[name]
+        ou, nu = float(o["us_per_call"]), float(n["us_per_call"])
+        if _grew(ou, nu, rel_tol, abs_floor_us):
+            regressions.append(
+                f"{name}: us_per_call {ou:.1f} -> {nu:.1f} "
+                f"(+{(nu / ou - 1) * 100:.0f}%)")
+        elif nu < ou * (1.0 - rel_tol) and (ou - nu) > abs_floor_us:
+            improvements.append(
+                f"{name}: us_per_call {ou:.1f} -> {nu:.1f} "
+                f"({(nu / ou - 1) * 100:.0f}%)")
+        oj, nj = o.get("jitter"), n.get("jitter")
+        if not (isinstance(oj, dict) and isinstance(nj, dict)):
+            continue
+        op99, np99 = float(oj["p99"]), float(nj["p99"])
+        if _grew(op99, np99, rel_tol, abs_floor_us):
+            regressions.append(
+                f"{name}: jitter.p99 {op99:.1f} -> {np99:.1f} "
+                f"(+{(np99 / op99 - 1) * 100:.0f}%)")
+        ocov, ncov = float(oj["cov"]), float(nj["cov"])
+        if ncov > ocov * (1.0 + cov_tol) + cov_abs:
+            regressions.append(
+                f"{name}: jitter.cov {ocov:.4f} -> {ncov:.4f} "
+                "(predictability regression)")
+
+    for name in sorted(set(old_by) - set(new_by)):
+        notes.append(f"{name}: only in old report")
+    for name in sorted(set(new_by) - set(old_by)):
+        notes.append(f"{name}: only in new report")
+    return regressions, improvements, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json reports; non-zero exit on "
+                    "speed or predictability regressions")
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--rel-tol", type=float, default=0.5,
+                    help="relative us_per_call/p99 growth tolerated "
+                         "(default 0.5 = +50%%; wall-clock rows are "
+                         "noisy)")
+    ap.add_argument("--abs-floor-us", type=float, default=50.0,
+                    help="absolute growth (us) below which a row "
+                         "never regresses")
+    ap.add_argument("--cov-tol", type=float, default=0.5,
+                    help="relative CoV growth tolerated")
+    ap.add_argument("--cov-abs", type=float, default=0.02,
+                    help="absolute CoV slack on top of --cov-tol")
+    args = ap.parse_args(argv)
+
+    old = load_report(args.old)
+    new = load_report(args.new)
+    if old is None or new is None:
+        return EXIT_INVALID
+
+    fp_keys = ("python", "platform", "machine", "jax", "numpy")
+    ofp, nfp = old["hw_fingerprint"], new["hw_fingerprint"]
+    drift = [k for k in fp_keys if ofp.get(k) != nfp.get(k)]
+    if drift:
+        print(f"WARNING: environment fingerprint differs on "
+              f"{', '.join(drift)} — numbers may not be comparable",
+              file=sys.stderr)
+
+    regressions, improvements, notes = compare(
+        old, new, rel_tol=args.rel_tol, abs_floor_us=args.abs_floor_us,
+        cov_tol=args.cov_tol, cov_abs=args.cov_abs)
+
+    for line in notes:
+        print(f"note: {line}")
+    for line in improvements:
+        print(f"improved: {line}")
+    for line in regressions:
+        print(f"REGRESSION: {line}")
+    common = set(b["name"] for b in old["benchmarks"]) \
+        & set(b["name"] for b in new["benchmarks"])
+    print(f"bench_diff: {len(regressions)} regression(s), "
+          f"{len(improvements)} improvement(s) across "
+          f"{len(common)} common benchmarks")
+    return EXIT_REGRESSION if regressions else EXIT_OK
+
+
+if __name__ == "__main__":
+    sys.exit(main())

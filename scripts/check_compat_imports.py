@@ -10,9 +10,9 @@ and fails if any appear outside the allowlist.  Run directly or via
 tests/test_compat_lint.py (tier-1).
 
 SCAN_DIRS is the whole tree that may contain Python — src (including
-src/repro/obs), tests, scripts, benchmarks, examples; new top-level
-code directories must be added here (tests/test_compat_lint.py pins
-the expected scope).
+src/repro/obs and src/repro/tuning), tests, scripts, benchmarks,
+examples; new top-level code directories must be added here
+(tests/test_compat_lint.py pins the expected scope).
 
 The patterns below are built by string concatenation so this file does
 not flag itself.

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Offline jitter-aware kernel autotuner CLI (repro.tuning).
+
+Tunes registered Pallas kernels and persists the winning block plans
+to the JSON plan cache, so later runs — benchmarks, serving, or this
+script again — reuse them with ZERO measurements (the final
+``measurement spans`` line is the proof: it counts the timed reps
+recorded on the obs trace, and a fully warm cache prints 0).
+
+  # tune every registered kernel on the benchmark shapes
+  PYTHONPATH=src python scripts/tune.py
+
+  # one kernel, explicit shape/dtype, fresh measurements
+  PYTHONPATH=src python scripts/tune.py --kernel spm_matmul \
+      --shape 512x512x512 --dtype bfloat16 --force
+
+Shape syntax per kernel: spm_matmul MxKxN; flash_attention BxSxHxKVxD
+(causal, Sq=Sk=S); wkv6 BxSxHxK.  Cache path: --cache, else
+$REPRO_PLAN_CACHE, else ~/.cache/repro/tuning_plans.json.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main(argv=None) -> int:
+    from repro.kernels import registered_kernels
+    ap = argparse.ArgumentParser(
+        description="offline jitter-aware kernel autotuner")
+    ap.add_argument("--kernel", action="append",
+                    choices=registered_kernels(),
+                    help="kernel(s) to tune (default: all registered)")
+    ap.add_argument("--shape", default=None,
+                    help="kernel-specific shape (single --kernel only)")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="timed reps per surviving candidate")
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--max-candidates", type=int, default=4,
+                    help="plans measured after analytic pruning")
+    ap.add_argument("--cache", default=None,
+                    help="plan-cache path (default: $REPRO_PLAN_CACHE)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-measure even on a warm cache")
+    args = ap.parse_args(argv)
+
+    from repro.obs import TraceRecorder
+    from repro.tuning import (DEFAULT_PROBLEMS, PlanCache,
+                              measurement_count, parse_problem,
+                              plan_sig, tune)
+
+    kernels = args.kernel or registered_kernels()
+    if args.shape and len(kernels) != 1:
+        ap.error("--shape needs exactly one --kernel")
+    jobs = []
+    for kern in kernels:
+        problem = (parse_problem(kern, args.shape, args.dtype)
+                   if args.shape else DEFAULT_PROBLEMS[kern])
+        jobs.append((kern, problem))
+
+    cache = PlanCache(args.cache) if args.cache else None
+    trace = TraceRecorder()
+    for kern, problem in jobs:
+        res = tune(kern, problem, cache=cache, reps=args.reps,
+                   warmup=args.warmup,
+                   max_candidates=args.max_candidates,
+                   force=args.force, trace=trace)
+        line = (f"{kern} {problem.sig}: plan={plan_sig(res.plan)} "
+                f"[{res.source}] measured={res.measured}")
+        if res.stats is not None:
+            line += (f" p99_us={res.stats.p99:.1f} "
+                     f"cov={res.stats.cov:.4f} "
+                     f"(candidates={res.candidates} "
+                     f"feasible={res.feasible} "
+                     f"pruned_to={res.pruned_to})")
+        print(line)
+    print(f"plan cache: {(cache or PlanCache()).path}")
+    print(f"measurement spans: {measurement_count(trace)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,6 +39,23 @@ def roofline_terms(flops_dev: float, bytes_dev: float,
     return terms
 
 
+def kernel_bound_s(flops: float, bytes_accessed: float, *,
+                   peak_flops: float = PEAK_FLOPS,
+                   hbm_bw: float = HBM_BW,
+                   mxu_eff: float = 1.0,
+                   hbm_derate: float = 1.0) -> float:
+    """Two-term roofline bound for a single fused kernel, in seconds.
+
+    The per-device composition above is for whole programs; a single
+    Pallas kernel has no collective term, so its bound is just
+    max(compute, memory).  ``mxu_eff``/``hbm_derate`` let callers apply
+    worst-case derates (core.tpu_mapping.TPUChip) — the autotuner's
+    analytic pruner ranks candidate block plans with this.
+    """
+    return max(flops / (peak_flops * mxu_eff),
+               bytes_accessed / (hbm_bw * hbm_derate))
+
+
 def compose_pieces(piece_records) -> Dict[str, float]:
     """Sum (cost x multiplier) over piece records from the runner."""
     tot = {"flops": 0.0, "bytes_accessed": 0.0, "collective_bytes": 0.0}

@@ -11,11 +11,52 @@ coverage.
 
 Keep cases small: interpret mode executes the grid sequentially on CPU,
 so these are semantics checks, not perf runs (benchmarks/ owns timing).
+
+``KERNEL_REGISTRY`` is the authoritative table of public kernel entry
+points and their tunable block parameters: the autotuner
+(``repro.tuning``) tunes exactly these names, scripts/tune.py and the
+kernel benchmark iterate over them, and the wrappers behind
+``import_entry`` resolve un-passed block params through the persistent
+plan cache (explicit arguments always override).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional, Tuple
+import importlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """One public kernel: where its wrapper lives and which kwargs the
+    autotuner owns."""
+    name: str
+    module: str
+    func: str
+    plan_params: Tuple[str, ...]
+
+
+KERNEL_REGISTRY: Dict[str, KernelEntry] = {
+    "spm_matmul": KernelEntry(
+        "spm_matmul", "repro.kernels.spm_matmul.ops", "matmul",
+        ("bm", "bn", "bk")),
+    "flash_attention": KernelEntry(
+        "flash_attention", "repro.kernels.flash_attention.ops",
+        "attention", ("bq", "bk")),
+    "wkv6": KernelEntry(
+        "wkv6", "repro.kernels.wkv6.ops", "wkv", ("chunk",)),
+}
+
+
+def registered_kernels() -> List[str]:
+    return sorted(KERNEL_REGISTRY)
+
+
+def import_entry(name: str) -> Callable[..., Any]:
+    """Resolve a registry row to its public wrapper (lazy: importing
+    this package must not pull in jax)."""
+    entry = KERNEL_REGISTRY[name]
+    return getattr(importlib.import_module(entry.module), entry.func)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,12 +1,30 @@
-"""jit'd public wrapper for the flash-attention kernel."""
+"""jit'd public wrapper for the flash-attention kernel.
+
+Block-plan resolution (repro.tuning.resolve_plan): explicit ``bq/bk``
+arguments always win; otherwise a tuned plan from the persistent plan
+cache is used when one exists for this (shape, dtype, environment),
+else the shape-safe defaults.  ``REPRO_AUTOTUNE=0`` disables the
+cache consult.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 from repro.compat import resolve_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention
 
 
-def attention(q, k, v, *, causal=True, window=0, scale=0.0, bq=256,
-              bk=256, interpret=None):
+def attention(q, k, v, *, causal=True, window=0, scale=0.0,
+              bq: Optional[int] = None, bk: Optional[int] = None,
+              interpret=None):
+    from repro.tuning import AttentionProblem, resolve_plan
+    B, Sq, H, D = q.shape
+    plan = resolve_plan(
+        "flash_attention",
+        AttentionProblem(B, Sq, k.shape[1], H, k.shape[2], D,
+                         causal=causal, window=window,
+                         dtype=str(q.dtype)),
+        {"bq": bq, "bk": bk})
     return flash_attention(q, k, v, causal=causal, window=window,
-                           scale=scale, bq=bq, bk=bk,
+                           scale=scale, bq=plan["bq"], bk=plan["bk"],
                            interpret=resolve_interpret(interpret))

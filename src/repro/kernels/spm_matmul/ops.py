@@ -4,8 +4,16 @@ The block plan is validated against the same scratchpad-capacity logic
 the paper core uses (core.tpu_mapping) — the BlockSpec IS the static
 DMA schedule, so an infeasible plan is a scheduling bug, not a runtime
 surprise.
+
+Block-plan resolution (repro.tuning.resolve_plan): explicit ``bm/bn/
+bk`` arguments always win; otherwise a tuned plan from the persistent
+plan cache is used when one exists for this (shape, dtype,
+environment), else the shape-safe defaults.  ``REPRO_AUTOTUNE=0``
+disables the cache consult.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 from repro.compat import resolve_interpret
 from repro.core.tpu_mapping import V5E, TPUChip
@@ -21,14 +29,21 @@ def vmem_plan(m: int, k: int, n: int, bm: int, bn: int, bk: int = 0,
             "fits": need <= chip.vmem_bytes}
 
 
-def matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 0,
-           interpret=None):
+def matmul(a, b, *, bm: Optional[int] = None, bn: Optional[int] = None,
+           bk: Optional[int] = None, interpret=None):
     """Public entry point.  interpret=None auto-selects interpret mode
     off-TPU (CPU validation; see EXAMPLE.md)."""
+    from repro.tuning import MatmulProblem, resolve_plan
+    plan = resolve_plan(
+        "spm_matmul",
+        MatmulProblem(a.shape[0], a.shape[1], b.shape[1],
+                      str(a.dtype)),
+        {"bm": bm, "bn": bn, "bk": bk})
+    bm, bn, bk = plan["bm"], plan["bn"], plan["bk"]
     interpret = resolve_interpret(interpret)
-    plan = vmem_plan(a.shape[0], a.shape[1], b.shape[1], bm, bn, bk,
-                     a.dtype.itemsize)
-    if not plan["fits"]:
+    fits = vmem_plan(a.shape[0], a.shape[1], b.shape[1], bm, bn, bk,
+                     a.dtype.itemsize)["fits"]
+    if not fits:
         if bk <= 0:
             bk = 512
         while not vmem_plan(a.shape[0], a.shape[1], b.shape[1], bm, bn,

@@ -1,10 +1,24 @@
-"""jit'd public wrapper for the WKV6 chunk kernel."""
+"""jit'd public wrapper for the WKV6 chunk kernel.
+
+Chunk resolution (repro.tuning.resolve_plan): an explicit ``chunk``
+argument always wins; otherwise a tuned plan from the persistent plan
+cache is used when one exists for this (shape, dtype, environment),
+else the shape-safe default.  ``REPRO_AUTOTUNE=0`` disables the cache
+consult.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 from repro.compat import resolve_interpret
 from repro.kernels.wkv6.wkv6 import wkv6
 
 
-def wkv(r, k, v, w_log, u, *, chunk=128, interpret=None):
-    return wkv6(r, k, v, w_log, u, chunk=chunk,
+def wkv(r, k, v, w_log, u, *, chunk: Optional[int] = None,
+        interpret=None):
+    from repro.tuning import WkvProblem, resolve_plan
+    B, S, H, K = r.shape
+    plan = resolve_plan("wkv6", WkvProblem(B, S, H, K, str(r.dtype)),
+                        {"chunk": chunk})
+    return wkv6(r, k, v, w_log, u, chunk=plan["chunk"],
                 interpret=resolve_interpret(interpret))

@@ -8,10 +8,16 @@ paper's Fig. 4 variability measurement.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --batch 4 --prompt-len 64 --gen 32
+
+Set ``REPRO_TRACE=/path/serve.json`` to record the prefill and every
+decode step as spans on the ``serve`` track (plus a per-step latency
+counter) and dump a Chrome trace at exit — the same knob the trainer
+and the kernel-conformance harness honor.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -33,7 +39,6 @@ def main():
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--vocab", type=int, default=512)
-    ap.add_argument("--seq", type=int, default=0)     # unused; parity
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -56,9 +61,19 @@ def main():
     step = jax.jit(lambda p, c, t, i: lm_mod.decode_step(
         cfg, p, c, t, i, opts), donate_argnums=(1,))
 
+    trace_path = os.environ.get("REPRO_TRACE")
+    rec = None
+    if trace_path:
+        from repro.obs import TraceRecorder
+        rec = TraceRecorder(time_unit="us")
+
     t0 = time.monotonic()
     logits, cache = jax.block_until_ready(prefill(params, batch))
     t_prefill = time.monotonic() - t0
+    if rec is not None:
+        rec.add_span("prefill", "serve", t0 * 1e6,
+                     (t0 + t_prefill) * 1e6, cat="serve",
+                     batch=B, prompt_len=P)
 
     out = []
     times = []
@@ -67,7 +82,12 @@ def main():
         t1 = time.monotonic()
         logits, cache = step(params, cache, tok, P + i)
         logits = jax.block_until_ready(logits)
-        times.append(time.monotonic() - t1)
+        t2 = time.monotonic()
+        times.append(t2 - t1)
+        if rec is not None:
+            rec.add_span(f"decode{i}", "serve", t1 * 1e6, t2 * 1e6,
+                         cat="serve", pos=P + i)
+            rec.counter("step_ms", (t2 - t1) * 1e3, track="serve")
         tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
         out.append(np.asarray(tok))
 
@@ -86,6 +106,11 @@ def main():
                                 tile_n=512)
     print(f"TPU-target WCET bound per step (weight pass): "
           f"{tpu_wcet(sched)*1e3:.3f} ms")
+
+    if rec is not None and rec.spans:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(rec, trace_path)
+        print(f"trace: {len(rec.spans)} spans -> {trace_path}")
 
 
 if __name__ == "__main__":

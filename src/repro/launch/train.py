@@ -5,11 +5,16 @@ published architecture sizes (requires a real TPU mesh).
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
       --steps 100 --d-model 128 --layers 2 --seq 128 --batch 8
+
+Set ``REPRO_TRACE=/path/train.json`` to record every training step as
+a span on the ``trainer`` track and dump a Chrome trace at exit (same
+knob the kernel-conformance harness honors).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 
 from repro.configs import TrainConfig, get_config
 from repro.data.pipeline import DataConfig
@@ -67,10 +72,23 @@ def main():
                       global_batch=args.batch, seq_len=args.seq)
     opts = RunOptions(chunk_q=64, chunk_kv=64, loss_chunk=64,
                       remat=False)
-    tr = Trainer(cfg, tcfg, dcfg, ckpt_dir=args.ckpt_dir, opts=opts)
+
+    trace_path = os.environ.get("REPRO_TRACE")
+    rec = None
+    if trace_path:
+        from repro.obs import TraceRecorder
+        rec = TraceRecorder(time_unit="us")
+
+    tr = Trainer(cfg, tcfg, dcfg, ckpt_dir=args.ckpt_dir, opts=opts,
+                 trace=rec)
     hist = tr.run(args.steps)
     print(f"first loss {hist['loss'][0]:.4f} -> last "
           f"{hist['loss'][-1]:.4f} in {hist['wall_s'][0]:.1f}s")
+
+    if rec is not None and rec.spans:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(rec, trace_path)
+        print(f"trace: {len(rec.spans)} spans -> {trace_path}")
 
 
 if __name__ == "__main__":

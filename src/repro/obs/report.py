@@ -28,11 +28,14 @@ _JITTER_KEYS = ("n", "mean", "median", "std", "min", "max", "spread",
 
 def hw_fingerprint() -> Dict[str, Any]:
     """Environment identity attached to every report."""
-    try:
+    jax_ver = backend = None
+    try:                                   # bench subset without jax
         import jax
         jax_ver = jax.__version__
-    except Exception:                      # bench subset without jax
-        jax_ver = None
+        # device identity — the tuning plan cache keys on this too
+        backend = jax.default_backend()
+    except Exception:
+        pass
     import numpy as np
 
     from repro.configs.multivic_paper import PAPER_CONFIGS
@@ -43,6 +46,7 @@ def hw_fingerprint() -> Dict[str, Any]:
         "platform": platform.platform(),
         "machine": platform.machine(),
         "jax": jax_ver,
+        "backend": backend,
         "numpy": np.__version__,
         "paper_configs_sha256": cfg_digest,
     }

@@ -1,0 +1,77 @@
+"""Jitter-aware offline kernel autotuner with a persistent plan cache.
+
+The paper's schedule construction (§4.3) decides feasibility and
+placement *ahead of execution*; this package applies the same
+discipline to Pallas block plans: candidates are enumerated and pruned
+analytically (VMEM feasibility + roofline ranking), survivors are
+measured under the predictability observatory, and selection is by
+**p99 latency with a CoV tie-break** — never by mean alone — so a
+faster plan is never accepted at the cost of execution-time
+fluctuation.  Winners persist to a JSON cache keyed by
+(kernel, shape/dtype, environment fingerprint); warm runs perform
+zero measurements.
+
+Layers:
+
+- ``plan``        — problems (shape/dtype signatures) and plan dicts.
+- ``candidates``  — per-kernel enumeration + shape-safe defaults.
+- ``cost_model``  — VMEM feasibility (the SPM-capacity rule) and the
+  analytic roofline pruner.
+- ``measure``     — TraceRecorder-backed timing + the jitter-aware
+  selection objective.
+- ``plan_cache``  — the persistent store ($REPRO_PLAN_CACHE).
+- ``autotuner``   — ``tune()``: enumerate -> prune -> measure -> persist.
+- ``runtime``     — ``resolve_plan()``: what the kernel wrappers call
+  (explicit args > cached plan > defaults; $REPRO_AUTOTUNE=0 disables
+  the cache consult).
+
+CLI: ``scripts/tune.py``.  Regression gate: ``scripts/bench_diff.py``.
+"""
+from repro.tuning.autotuner import TuneResult, make_runner, shortlist, tune
+from repro.tuning.candidates import (TUNE_SPECS, defaults_for,
+                                     enumerate_candidates)
+from repro.tuning.cost_model import (analytic_cost_s, cost_summary,
+                                     feasibility, vmem_need)
+from repro.tuning.measure import (MEASURE_TRACK, measure_callable,
+                                  measurement_count, select_plan)
+from repro.tuning.plan import (DEFAULT_PROBLEMS, AttentionProblem,
+                               MatmulProblem, Plan, Problem, WkvProblem,
+                               parse_problem, plan_sig)
+from repro.tuning.plan_cache import (PlanCache, cache_key,
+                                     env_fingerprint, env_sig)
+from repro.tuning.runtime import (active_cache, autotune_enabled, reset,
+                                  resolve_plan)
+
+__all__ = [
+    "AttentionProblem",
+    "DEFAULT_PROBLEMS",
+    "MEASURE_TRACK",
+    "MatmulProblem",
+    "Plan",
+    "PlanCache",
+    "Problem",
+    "TUNE_SPECS",
+    "TuneResult",
+    "WkvProblem",
+    "active_cache",
+    "analytic_cost_s",
+    "autotune_enabled",
+    "cache_key",
+    "cost_summary",
+    "defaults_for",
+    "enumerate_candidates",
+    "env_fingerprint",
+    "env_sig",
+    "feasibility",
+    "make_runner",
+    "measure_callable",
+    "measurement_count",
+    "parse_problem",
+    "plan_sig",
+    "reset",
+    "resolve_plan",
+    "select_plan",
+    "shortlist",
+    "tune",
+    "vmem_need",
+]

@@ -1,0 +1,168 @@
+"""The offline autotuner: enumerate -> prune -> measure -> persist.
+
+Pipeline for one (kernel, problem):
+
+1. enumerate candidate block plans (candidates.py),
+2. drop VMEM-infeasible ones and rank the rest with the analytic
+   roofline model (cost_model.py) — only the top ``max_candidates``
+   (always including the default plan) are ever measured,
+3. measure the survivors under an ``obs.TraceRecorder`` and select by
+   the jitter-aware objective (measure.py: p99 with CoV tie-break),
+4. persist the winner to the JSON plan cache (plan_cache.py) so every
+   later call — CLI, benchmark, or kernel wrapper — reuses it with
+   zero measurements.
+
+Measurement inputs are deterministic (fixed PRNG keys derived from the
+problem), mirroring the conformance harness, so re-tuning the same
+problem on the same machine measures the same computation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+from repro.obs import JitterStats, TraceRecorder
+from repro.tuning.candidates import defaults_for, enumerate_candidates
+from repro.tuning.cost_model import analytic_cost_s, feasibility
+from repro.tuning.measure import measure_callable, select_plan
+from repro.tuning.plan import (AttentionProblem, MatmulProblem, Plan,
+                               Problem, WkvProblem, plan_sig)
+from repro.tuning.plan_cache import PlanCache, cache_key
+
+
+@dataclass(frozen=True)
+class TuneResult:
+    kernel: str
+    problem: Problem
+    plan: Plan
+    source: str                       # "cache" | "measured"
+    key: str
+    measured: int                     # timed reps performed (0 = warm)
+    candidates: int                   # enumerated
+    feasible: int                     # after the VMEM check
+    pruned_to: int                    # actually measured plans
+    stats: Optional[JitterStats] = None
+
+
+# ------------------------------------------------------ input builders
+# jax imports stay inside the builders: candidate enumeration, cost
+# modeling and cache lookups must work without touching jax at all.
+
+def make_runner(kernel: str, problem: Problem, plan: Plan,
+                interpret: Optional[bool] = None) -> Callable[[], None]:
+    """A zero-arg thunk running the kernel once on deterministic
+    inputs, blocking on the result (what measure_callable times)."""
+    import jax
+    import jax.numpy as jnp
+
+    if kernel == "spm_matmul":
+        from repro.kernels.spm_matmul.ops import matmul
+        p: MatmulProblem = problem
+        dt = jnp.dtype(p.dtype)
+        ka, kb = jax.random.split(jax.random.PRNGKey(p.m + p.k + p.n))
+        a = jax.random.normal(ka, (p.m, p.k), jnp.float32).astype(dt)
+        b = jax.random.normal(kb, (p.k, p.n), jnp.float32).astype(dt)
+        kw = dict(plan)
+        return lambda: jax.block_until_ready(
+            matmul(a, b, interpret=interpret, **kw))
+
+    if kernel == "flash_attention":
+        from repro.kernels.flash_attention.ops import attention
+        ap: AttentionProblem = problem
+        dt = jnp.dtype(ap.dtype)
+        ks = jax.random.split(
+            jax.random.PRNGKey(ap.seq_q + ap.heads + ap.head_dim), 3)
+        q = jax.random.normal(
+            ks[0], (ap.batch, ap.seq_q, ap.heads, ap.head_dim),
+            jnp.float32).astype(dt)
+        k = jax.random.normal(
+            ks[1], (ap.batch, ap.seq_k, ap.kv_heads, ap.head_dim),
+            jnp.float32).astype(dt)
+        v = jax.random.normal(
+            ks[2], (ap.batch, ap.seq_k, ap.kv_heads, ap.head_dim),
+            jnp.float32).astype(dt)
+        kw = dict(plan)
+        return lambda: jax.block_until_ready(
+            attention(q, k, v, causal=ap.causal, window=ap.window,
+                      interpret=interpret, **kw))
+
+    if kernel == "wkv6":
+        from repro.kernels.wkv6.ops import wkv
+        wp: WkvProblem = problem
+        ks = jax.random.split(
+            jax.random.PRNGKey(wp.seq + wp.key_dim), 5)
+        shape = (wp.batch, wp.seq, wp.heads, wp.key_dim)
+        r = jax.random.normal(ks[0], shape) * 0.5
+        k = jax.random.normal(ks[1], shape) * 0.5
+        v = jax.random.normal(ks[2], shape) * 0.5
+        w_log = -jnp.exp(jax.random.normal(ks[3], shape) * 0.8 - 2.0)
+        u = jax.random.normal(ks[4], (wp.heads, wp.key_dim)) * 0.3
+        kw = dict(plan)
+        return lambda: jax.block_until_ready(
+            wkv(r, k, v, w_log, u, interpret=interpret, **kw))
+
+    raise KeyError(f"unknown kernel {kernel!r}")
+
+
+# -------------------------------------------------------------- tuning
+
+def shortlist(kernel: str, problem: Problem,
+              max_candidates: int = 4) -> Tuple[List[Plan], int, int]:
+    """Enumerate, VMEM-filter, rank analytically; returns the plans to
+    measure (default always included) plus (enumerated, feasible)."""
+    cands = enumerate_candidates(kernel, problem)
+    feas = [c for c in cands if feasibility(kernel, problem, c).fits]
+    ranked = sorted(feas, key=lambda c: (
+        analytic_cost_s(kernel, problem, c), plan_sig(c)))
+    keep = ranked[:max(1, max_candidates)]
+    default = defaults_for(kernel, problem)
+    if default in feas and default not in keep:
+        keep.append(default)
+    if not keep:        # every candidate over-commits VMEM: measure the
+        keep = [default]   # default anyway (ops-level fallback shrinks)
+    return keep, len(cands), len(feas)
+
+
+def tune(kernel: str, problem: Problem, *,
+         cache: Optional[PlanCache] = None,
+         reps: int = 5, warmup: int = 1, max_candidates: int = 4,
+         tie_rel: float = 0.05, force: bool = False,
+         interpret: Optional[bool] = None,
+         trace: Optional[TraceRecorder] = None) -> TuneResult:
+    """Tune one (kernel, problem), consulting/updating the plan cache.
+
+    A warm cache short-circuits before any jax work: ``measured == 0``
+    and no spans are added to ``trace``.  ``force=True`` re-measures
+    and overwrites the cached plan.
+    """
+    if cache is None:
+        from repro.tuning.runtime import active_cache
+        cache = active_cache()
+    key = cache_key(kernel, problem)
+    if not force:
+        cached = cache.get(key)
+        if cached is not None:
+            return TuneResult(kernel, problem, cached, "cache", key,
+                              measured=0, candidates=0, feasible=0,
+                              pruned_to=0)
+
+    keep, n_cands, n_feas = shortlist(kernel, problem, max_candidates)
+    results: List[Tuple[Plan, JitterStats]] = []
+    for plan in keep:
+        fn = make_runner(kernel, problem, plan, interpret=interpret)
+        stats = measure_callable(
+            fn, reps=reps, warmup=warmup, trace=trace,
+            label=f"{kernel}/{problem.sig}/{plan_sig(plan)}")
+        results.append((plan, stats))
+    best_plan, best_stats = select_plan(results, tie_rel=tie_rel)
+
+    cache.put(key, best_plan,
+              kernel=kernel, shape=problem.sig, dtype=problem.dtype,
+              objective=best_stats.as_dict(),
+              candidates=n_cands, feasible=n_feas,
+              measured_plans=len(results), reps=reps)
+    cache.save()
+    return TuneResult(kernel, problem, dict(best_plan), "measured",
+                      key, measured=len(results) * max(1, reps),
+                      candidates=n_cands, feasible=n_feas,
+                      pruned_to=len(results), stats=best_stats)

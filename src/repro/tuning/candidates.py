@@ -1,0 +1,119 @@
+"""Candidate block-plan enumeration + per-kernel defaults.
+
+Candidates respect two hard constraints the kernels assert: every
+block must divide its dimension evenly, and tiles should stay in the
+TPU-native family (lane dim 128; sublane multiples of 8) when the
+problem allows it.  Enumeration is deliberately small — the analytic
+model (cost_model.py) prunes and measurement picks — so an exhaustive
+sweep is never needed to get a good plan.
+
+``defaults_for`` is the plan a wrapper uses with no cache entry and no
+explicit args; it reproduces the kernels' historical hand-picked
+defaults on the shapes they were picked for.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+from repro.tuning.plan import (AttentionProblem, MatmulProblem, Plan,
+                               Problem, WkvProblem)
+
+
+def _tile_candidates(dim: int,
+                     tiles: Tuple[int, ...] = (128, 256, 512)) -> List[int]:
+    """Preferred tile sizes that divide ``dim``, plus ``dim`` itself
+    when it is small enough to be a single block."""
+    cands = {t for t in tiles if t <= dim and dim % t == 0}
+    if dim <= max(tiles):
+        cands.add(dim)
+    if not cands:           # dim divides none of the standard tiles
+        cands.add(dim)
+    return sorted(cands)
+
+
+def _default_tile(dim: int, cap: int,
+                  tiles: Tuple[int, ...] = (128, 256, 512)) -> int:
+    """Largest standard tile <= cap that divides dim (the hand-picked
+    default policy, made shape-safe)."""
+    fitting = [t for t in _tile_candidates(dim, tiles) if t <= cap]
+    return max(fitting) if fitting else dim
+
+
+# ------------------------------------------------------------ spm_matmul
+
+def _enum_spm_matmul(p: MatmulProblem) -> List[Plan]:
+    bks = [0] + [b for b in (256, 512) if b < p.k and p.k % b == 0]
+    return [{"bm": bm, "bn": bn, "bk": bk}
+            for bm in _tile_candidates(p.m)
+            for bn in _tile_candidates(p.n)
+            for bk in bks]
+
+
+def _default_spm_matmul(p: MatmulProblem) -> Plan:
+    return {"bm": _default_tile(p.m, 256), "bn": _default_tile(p.n, 256),
+            "bk": 0}
+
+
+# ------------------------------------------------------ flash_attention
+
+_ATTN_TILES = (64, 128, 256, 512)
+
+
+def _enum_flash(p: AttentionProblem) -> List[Plan]:
+    return [{"bq": bq, "bk": bk}
+            for bq in _tile_candidates(p.seq_q, _ATTN_TILES)
+            for bk in _tile_candidates(p.seq_k, _ATTN_TILES)]
+
+
+def _default_flash(p: AttentionProblem) -> Plan:
+    return {"bq": _default_tile(p.seq_q, 256, _ATTN_TILES),
+            "bk": _default_tile(p.seq_k, 256, _ATTN_TILES)}
+
+
+# ----------------------------------------------------------------- wkv6
+
+_WKV_TILES = (32, 64, 128, 256)
+
+
+def _enum_wkv(p: WkvProblem) -> List[Plan]:
+    return [{"chunk": c} for c in _tile_candidates(p.seq, _WKV_TILES)]
+
+
+def _default_wkv(p: WkvProblem) -> Plan:
+    return {"chunk": _default_tile(p.seq, 128, _WKV_TILES)}
+
+
+# -------------------------------------------------------------- registry
+
+@dataclass(frozen=True)
+class KernelTuneSpec:
+    """Tuning hooks for one registered kernel."""
+    name: str
+    param_names: Tuple[str, ...]
+    defaults: Callable[[Problem], Plan]
+    enumerate: Callable[[Problem], List[Plan]]
+
+
+TUNE_SPECS: Dict[str, KernelTuneSpec] = {
+    "spm_matmul": KernelTuneSpec(
+        "spm_matmul", ("bm", "bn", "bk"),
+        _default_spm_matmul, _enum_spm_matmul),
+    "flash_attention": KernelTuneSpec(
+        "flash_attention", ("bq", "bk"),
+        _default_flash, _enum_flash),
+    "wkv6": KernelTuneSpec(
+        "wkv6", ("chunk",), _default_wkv, _enum_wkv),
+}
+
+
+def defaults_for(kernel: str, problem: Problem) -> Plan:
+    return dict(TUNE_SPECS[kernel].defaults(problem))
+
+
+def enumerate_candidates(kernel: str, problem: Problem) -> List[Plan]:
+    cands = TUNE_SPECS[kernel].enumerate(problem)
+    default = TUNE_SPECS[kernel].defaults(problem)
+    if default not in cands:
+        cands.append(default)
+    return cands

@@ -1,0 +1,186 @@
+"""Analytic pruning stage of the autotuner.
+
+Before anything is measured, every candidate block plan is checked for
+VMEM feasibility (the same scratchpad-capacity rule the paper's
+scheduler applies before constructing a static schedule — an
+infeasible plan is rejected *offline*, never discovered at runtime)
+and ranked by a roofline bound (analysis.roofline.kernel_bound_s with
+the worst-case derates from core.tpu_mapping.TPUChip) plus a small
+per-grid-step dispatch term so plans that trade bandwidth for a much
+longer sequential grid don't all rank identically.
+
+The traffic models mirror the kernels' BlockSpec index maps — the
+BlockSpec IS the static DMA schedule, so bytes-moved is computable
+exactly from (problem, plan):
+
+- spm_matmul: A is re-streamed once per B-column block, B once per
+  row sweep (3D path), C written once.
+- flash_attention: K/V are re-streamed once per query block
+  (flash cost), Q/O move once.
+- wkv6: the recurrent state never leaves VMEM; inputs/outputs stream
+  once.  Compute grows with the chunk length (the [L,L,K] intra-chunk
+  working set), so chunk choice is a real compute/overhead trade.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.analysis.roofline import kernel_bound_s
+from repro.core.tpu_mapping import V5E, TPUChip
+from repro.tuning.plan import (AttentionProblem, MatmulProblem, Plan,
+                               Problem, WkvProblem)
+
+F32 = 4
+
+# Per-grid-step dispatch/pipeline overhead (seconds) for ranking only:
+# real parts pay a small fixed cost per grid step, and the interpret
+# measurement path pays a much larger one — either way, fewer steps at
+# equal traffic should outrank more steps.
+GRID_STEP_OVERHEAD_S = 2e-7
+
+
+def _elem_bytes(dtype: str) -> int:
+    return {"bfloat16": 2, "float16": 2, "float32": 4,
+            "float64": 8}.get(dtype, 4)
+
+
+@dataclass(frozen=True)
+class Feasibility:
+    fits: bool
+    vmem_need: int
+    vmem_bytes: int
+
+
+def _clamped_matmul(p: MatmulProblem, plan: Plan) -> Tuple[int, int, int]:
+    """The kernel clamps bm/bn to the problem dims; mirror that so the
+    model prices what actually runs."""
+    bm = min(plan["bm"], p.m)
+    bn = min(plan["bn"], p.n)
+    bk = plan.get("bk", 0)
+    bk = p.k if bk <= 0 or bk >= p.k else bk
+    return bm, bn, bk
+
+
+def vmem_need(kernel: str, problem: Problem, plan: Plan) -> int:
+    """Bytes of VMEM the plan pins, double-buffering streamed tiles —
+    the TPU spelling of the paper's SPM residency requirement."""
+    e = _elem_bytes(problem.dtype)
+    if kernel == "spm_matmul":
+        bm, bn, bk = _clamped_matmul(problem, plan)
+        # A tile + B block + C tile, double-buffered A/C (ops.vmem_plan
+        # applies the identical rule at call time).
+        return (2 * bm * bk + bk * bn + 2 * bm * bn) * e
+    if kernel == "flash_attention":
+        p: AttentionProblem = problem
+        bq = min(plan["bq"], p.seq_q)
+        bk = min(plan["bk"], p.seq_k)
+        d = p.head_dim
+        # Q/O tiles + double-buffered K/V tiles + fp32 (m, l, acc)
+        # scratch carried across the kv grid axis.
+        return (2 * bq * d + 2 * 2 * bk * d) * e \
+            + (bq * d + 2 * bq) * F32
+    if kernel == "wkv6":
+        w: WkvProblem = problem
+        L = min(plan["chunk"], w.seq)
+        K = w.key_dim
+        # 4 streamed [L,K] inputs (double-buffered) + y tile + the
+        # [L,L,K] intra-chunk decay working set (seg + P) + S scratch.
+        return (2 * 4 * L * K + 2 * L * K) * _elem_bytes(w.dtype) \
+            + (2 * L * L * K + L * L + K * K) * F32
+    raise KeyError(f"unknown kernel {kernel!r}")
+
+
+def feasibility(kernel: str, problem: Problem, plan: Plan,
+                chip: TPUChip = V5E) -> Feasibility:
+    need = vmem_need(kernel, problem, plan)
+    return Feasibility(need <= chip.vmem_bytes, need, chip.vmem_bytes)
+
+
+def grid_steps(kernel: str, problem: Problem, plan: Plan) -> int:
+    """Sequential grid length — the number of pipeline steps the
+    static schedule executes."""
+    if kernel == "spm_matmul":
+        p: MatmulProblem = problem
+        bm, bn, bk = _clamped_matmul(p, plan)
+        steps = (p.n // bn) * (p.m // bm)
+        if bk < p.k:
+            steps *= p.k // bk
+        return steps
+    if kernel == "flash_attention":
+        a: AttentionProblem = problem
+        bq = min(plan["bq"], a.seq_q)
+        bk = min(plan["bk"], a.seq_k)
+        return a.batch * a.heads * (a.seq_q // bq) * (a.seq_k // bk)
+    if kernel == "wkv6":
+        w: WkvProblem = problem
+        L = min(plan["chunk"], w.seq)
+        return w.batch * w.heads * (w.seq // L)
+    raise KeyError(f"unknown kernel {kernel!r}")
+
+
+def flops_bytes(kernel: str, problem: Problem,
+                plan: Plan) -> Tuple[float, float]:
+    """(flops, HBM bytes moved) for one invocation under ``plan``."""
+    if kernel == "spm_matmul":
+        p: MatmulProblem = problem
+        e = _elem_bytes(p.dtype)
+        bm, bn, bk = _clamped_matmul(p, plan)
+        a_bytes = (p.n // bn) * p.m * p.k * e       # re-read per j
+        if bk < p.k:                                # 3D accumulate path
+            b_bytes = (p.m // bm) * p.k * p.n * e   # re-read per i
+        else:
+            b_bytes = p.k * p.n * e                 # resident per j
+        c_bytes = p.m * p.n * e
+        return 2.0 * p.m * p.k * p.n, a_bytes + b_bytes + c_bytes
+    if kernel == "flash_attention":
+        a: AttentionProblem = problem
+        e = _elem_bytes(a.dtype)
+        bq = min(plan["bq"], a.seq_q)
+        q_bytes = 2 * a.batch * a.seq_q * a.heads * a.head_dim * e
+        kv_bytes = (2 * a.batch * a.kv_heads * a.seq_k * a.head_dim
+                    * e * (a.heads // a.kv_heads) * (a.seq_q // bq))
+        flops = 4.0 * a.batch * a.heads * a.seq_q * a.seq_k * a.head_dim
+        if a.causal:
+            flops /= 2
+        return flops, q_bytes + kv_bytes
+    if kernel == "wkv6":
+        w: WkvProblem = problem
+        e = _elem_bytes(w.dtype)
+        L = min(plan["chunk"], w.seq)
+        nc = w.seq // L
+        K = w.key_dim
+        # per chunk: intra-chunk decay+scores (~3 L^2 K), A@v (2 L^2 K)
+        # and the two state matmuls (~4 L K^2)
+        flops = w.batch * w.heads * nc * (5.0 * L * L * K
+                                          + 4.0 * L * K * K)
+        io_bytes = 5 * w.batch * w.seq * w.heads * K * e \
+            + w.batch * w.heads * K * K * F32
+        return flops, io_bytes
+    raise KeyError(f"unknown kernel {kernel!r}")
+
+
+def analytic_cost_s(kernel: str, problem: Problem, plan: Plan,
+                    chip: TPUChip = V5E) -> float:
+    """Modeled worst-case seconds — the pruning objective.  Measurement
+    (measure.py) decides among the survivors; this only has to rank."""
+    flops, byts = flops_bytes(kernel, problem, plan)
+    bound = kernel_bound_s(flops, byts,
+                           mxu_eff=chip.worst_mxu_eff,
+                           hbm_derate=chip.worst_hbm_derate)
+    return bound + grid_steps(kernel, problem, plan) * GRID_STEP_OVERHEAD_S
+
+
+def cost_summary(kernel: str, problem: Problem, plan: Plan,
+                 chip: TPUChip = V5E) -> Dict[str, float]:
+    """Itemized model output (CLI/report explainability)."""
+    flops, byts = flops_bytes(kernel, problem, plan)
+    feas = feasibility(kernel, problem, plan, chip)
+    return {
+        "flops": flops,
+        "bytes": byts,
+        "grid_steps": float(grid_steps(kernel, problem, plan)),
+        "vmem_need": float(feas.vmem_need),
+        "fits": float(feas.fits),
+        "cost_s": analytic_cost_s(kernel, problem, plan, chip),
+    }

@@ -1,0 +1,150 @@
+"""Persistent JSON plan cache.
+
+Tuning is offline (paper §4.3: decisions are made ahead of execution),
+so winning plans persist to disk and subsequent runs — the CLI, the
+benchmarks, and the kernel wrappers themselves — hit the cache with
+zero measurements.
+
+Keying: ``kernel|problem.sig|env`` where ``env`` is a digest of the
+environment fields of ``repro.obs.report.hw_fingerprint()`` plus the
+JAX backend.  A plan tuned on one machine/backend/JAX version is never
+silently reused on another (the problem ``sig`` already carries shape
+and dtype).
+
+The cache degrades, never fails: an unreadable or mis-shaped file (or
+entry) warns once and behaves as empty, so a corrupt cache can only
+cost re-tuning — it can never take the kernels down.
+
+Location: ``$REPRO_PLAN_CACHE`` if set, else
+``~/.cache/repro/tuning_plans.json``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import tempfile
+import time
+import warnings
+from typing import Any, Dict, Optional
+
+CACHE_SCHEMA_VERSION = 1
+CACHE_PATH_ENV = "REPRO_PLAN_CACHE"
+DEFAULT_CACHE_PATH = "~/.cache/repro/tuning_plans.json"
+
+# hw_fingerprint fields that identify the execution environment for
+# plan reuse (the paper-config digest is model-level, not kernel-level)
+_ENV_KEYS = ("python", "platform", "machine", "jax", "numpy", "backend")
+
+
+def env_fingerprint() -> Dict[str, Any]:
+    """The plan-relevant slice of ``obs.report.hw_fingerprint()``."""
+    from repro.obs.report import hw_fingerprint
+    fp = hw_fingerprint()
+    return {k: fp.get(k) for k in _ENV_KEYS}
+
+
+def env_sig(fp: Optional[Dict[str, Any]] = None) -> str:
+    fp = env_fingerprint() if fp is None else fp
+    blob = json.dumps({k: fp.get(k) for k in _ENV_KEYS}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def cache_key(kernel: str, problem) -> str:
+    return f"{kernel}|{problem.sig}|{env_sig()}"
+
+
+def _valid_entry(entry: Any) -> bool:
+    return (isinstance(entry, dict)
+            and isinstance(entry.get("plan"), dict)
+            and all(isinstance(k, str) and isinstance(v, int)
+                    and not isinstance(v, bool)
+                    for k, v in entry["plan"].items()))
+
+
+class PlanCache:
+    """Load-once, save-atomically plan store with hit/miss counters."""
+
+    def __init__(self, path: Optional[str] = None):
+        raw = path or os.environ.get(CACHE_PATH_ENV) \
+            or DEFAULT_CACHE_PATH
+        self.path = pathlib.Path(raw).expanduser()
+        self.hits = 0
+        self.misses = 0
+        self._plans: Optional[Dict[str, Dict[str, Any]]] = None
+
+    # ------------------------------------------------------------- load
+
+    def _load(self) -> Dict[str, Dict[str, Any]]:
+        if self._plans is not None:
+            return self._plans
+        self._plans = {}
+        if self.path.exists():
+            try:
+                doc = json.loads(self.path.read_text(encoding="utf-8"))
+                if (not isinstance(doc, dict)
+                        or doc.get("schema_version") != CACHE_SCHEMA_VERSION
+                        or not isinstance(doc.get("plans"), dict)):
+                    raise ValueError("unrecognized plan-cache schema")
+                self._plans = dict(doc["plans"])
+            except (ValueError, OSError) as e:
+                warnings.warn(
+                    f"plan cache {self.path} unreadable ({e}); "
+                    "ignoring it and falling back to default plans",
+                    RuntimeWarning, stacklevel=3)
+        return self._plans
+
+    # ----------------------------------------------------------- access
+
+    def get(self, key: str) -> Optional[Dict[str, int]]:
+        """The cached plan for ``key``, or None.  Mis-shaped entries
+        warn and count as misses."""
+        entry = self._load().get(key)
+        if entry is not None and not _valid_entry(entry):
+            warnings.warn(
+                f"plan cache {self.path}: entry {key!r} is mis-shaped; "
+                "ignoring it", RuntimeWarning, stacklevel=3)
+            entry = None
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return dict(entry["plan"])
+
+    def entry(self, key: str) -> Optional[Dict[str, Any]]:
+        """Full cache record (plan + provenance), if valid."""
+        entry = self._load().get(key)
+        return dict(entry) if _valid_entry(entry) else None
+
+    def put(self, key: str, plan: Dict[str, int],
+            **meta: Any) -> None:
+        self._load()[key] = {
+            "plan": {k: int(v) for k, v in plan.items()},
+            "tuned_at": time.time(),
+            "env": env_fingerprint(),
+            **meta,
+        }
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    # ------------------------------------------------------------- save
+
+    def save(self) -> pathlib.Path:
+        """Atomic write (tmp + rename): a crashed tuner never leaves a
+        half-written cache behind."""
+        doc = {"schema_version": CACHE_SCHEMA_VERSION,
+               "plans": self._load()}
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name + ".")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(doc, f, indent=2, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return self.path

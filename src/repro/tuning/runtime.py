@@ -1,0 +1,61 @@
+"""Call-time plan resolution for the kernel wrappers.
+
+The public kernel entry points (``kernels/*/ops.py``) take their block
+parameters as ``None`` defaults and resolve the actual plan here.
+Precedence, highest first:
+
+1. explicit arguments — a caller who passes ``bm=128`` always wins,
+2. a cached tuned plan for this (kernel, problem, environment),
+3. the shape-safe built-in defaults (candidates.defaults_for).
+
+The cache consult is a dict lookup after the first call (one shared
+``PlanCache`` per process, loaded lazily) and can be disabled entirely
+with ``REPRO_AUTOTUNE=0`` — tests run with it off so tier-1 never
+reads a developer's cache; scripts/tune.py and the benchmarks pass
+caches explicitly.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+from repro.tuning.candidates import defaults_for
+from repro.tuning.plan import Plan, Problem
+from repro.tuning.plan_cache import PlanCache, cache_key
+
+AUTOTUNE_ENV = "REPRO_AUTOTUNE"
+
+_active_cache: Optional[PlanCache] = None
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get(AUTOTUNE_ENV, "1").lower() \
+        not in ("0", "off", "false", "no")
+
+
+def active_cache() -> PlanCache:
+    """The process-wide plan cache (path from $REPRO_PLAN_CACHE)."""
+    global _active_cache
+    if _active_cache is None:
+        _active_cache = PlanCache()
+    return _active_cache
+
+
+def reset(cache: Optional[PlanCache] = None) -> None:
+    """Swap/clear the process cache (tests: after changing env vars)."""
+    global _active_cache
+    _active_cache = cache
+
+
+def resolve_plan(kernel: str, problem: Problem,
+                 overrides: Dict[str, Optional[int]]) -> Plan:
+    """Merge defaults <- cached plan <- explicit (non-None) args."""
+    plan = defaults_for(kernel, problem)
+    explicit = {k: v for k, v in overrides.items() if v is not None}
+    if len(explicit) < len(overrides) and autotune_enabled():
+        cached = active_cache().get(cache_key(kernel, problem))
+        if cached is not None:
+            plan.update({k: v for k, v in cached.items()
+                         if k in plan})
+    plan.update(explicit)
+    return plan

@@ -4,6 +4,12 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Hermeticity: never let the suite read (or write) a developer's real
+# tuning plan cache — kernel wrappers would silently pick up tuned
+# block plans and change what the conformance cases execute.
+# tests/test_tuning.py re-enables autotuning per-test with a tmp cache.
+os.environ.setdefault("REPRO_AUTOTUNE", "0")
+
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 

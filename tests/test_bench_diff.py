@@ -1,0 +1,120 @@
+"""scripts/bench_diff.py: the BENCH-trajectory regression gate on two
+synthetic schema-v1 reports (faster/slower/noisier variants)."""
+import importlib.util
+import json
+import pathlib
+
+from repro.obs import jitter_stats
+from repro.obs.report import make_report
+
+_SCRIPT = (pathlib.Path(__file__).resolve().parent.parent / "scripts"
+           / "bench_diff.py")
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("bench_diff", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _report(path, rows):
+    doc = make_report(rows, fast=True)
+    path.write_text(json.dumps(doc), encoding="utf-8")
+    return path
+
+
+def _row(name, us, jitter_samples=None):
+    row = {"name": name, "us_per_call": us, "derived": "x=1"}
+    if jitter_samples is not None:
+        row["jitter"] = jitter_stats(jitter_samples).as_dict()
+    return row
+
+
+def test_improvement_exits_zero(tmp_path, capsys):
+    bd = _load()
+    old = _report(tmp_path / "old.json",
+                  [_row("kernel/a", 1000.0, [990.0, 1000.0, 1010.0]),
+                   _row("bench/b", 50.0)])
+    new = _report(tmp_path / "new.json",
+                  [_row("kernel/a", 400.0, [396.0, 400.0, 404.0]),
+                   _row("bench/b", 50.0)])
+    assert bd.main([str(old), str(new)]) == bd.EXIT_OK
+    out = capsys.readouterr().out
+    assert "improved: kernel/a" in out
+    assert "0 regression(s)" in out
+
+
+def test_us_per_call_regression_exits_nonzero(tmp_path, capsys):
+    bd = _load()
+    old = _report(tmp_path / "old.json", [_row("kernel/a", 1000.0)])
+    new = _report(tmp_path / "new.json", [_row("kernel/a", 2000.0)])
+    assert bd.main([str(old), str(new)]) == bd.EXIT_REGRESSION
+    assert "REGRESSION: kernel/a: us_per_call" \
+        in capsys.readouterr().out
+
+
+def test_abs_floor_suppresses_micro_regressions(tmp_path):
+    bd = _load()
+    # 3x relative growth but only +20us absolute: below the floor
+    old = _report(tmp_path / "old.json", [_row("micro/x", 10.0)])
+    new = _report(tmp_path / "new.json", [_row("micro/x", 30.0)])
+    assert bd.main([str(old), str(new)]) == bd.EXIT_OK
+
+
+def test_p99_regression_detected(tmp_path, capsys):
+    bd = _load()
+    old = _report(tmp_path / "old.json",
+                  [_row("kernel/a", 1000.0, [990.0, 1000.0, 1010.0])])
+    # mean barely moves; the tail blows up
+    new = _report(tmp_path / "new.json",
+                  [_row("kernel/a", 1040.0,
+                        [960.0, 980.0, 1000.0, 5000.0])])
+    assert bd.main([str(old), str(new)]) == bd.EXIT_REGRESSION
+    assert "jitter.p99" in capsys.readouterr().out
+
+
+def test_cov_regression_detected(tmp_path, capsys):
+    bd = _load()
+    old = _report(tmp_path / "old.json",
+                  [_row("kernel/a", 1000.0,
+                        [999.0, 1000.0, 1001.0])])
+    # same speed, wildly unsteady: predictability gate must fire
+    new = _report(tmp_path / "new.json",
+                  [_row("kernel/a", 1000.0,
+                        [700.0, 900.0, 1100.0, 1300.0])])
+    assert bd.main([str(old), str(new)]) == bd.EXIT_REGRESSION
+    assert "jitter.cov" in capsys.readouterr().out
+
+
+def test_asymmetric_rows_are_notes_not_failures(tmp_path, capsys):
+    bd = _load()
+    old = _report(tmp_path / "old.json", [_row("only/old", 10.0)])
+    new = _report(tmp_path / "new.json", [_row("only/new", 10.0)])
+    assert bd.main([str(old), str(new)]) == bd.EXIT_OK
+    out = capsys.readouterr().out
+    assert "only/old: only in old report" in out
+    assert "only/new: only in new report" in out
+
+
+def test_invalid_inputs_exit_two(tmp_path, capsys):
+    bd = _load()
+    good = _report(tmp_path / "good.json", [_row("a", 1.0)])
+    missing = tmp_path / "missing.json"
+    assert bd.main([str(good), str(missing)]) == bd.EXIT_INVALID
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema_version": 999}),
+                   encoding="utf-8")
+    assert bd.main([str(bad), str(good)]) == bd.EXIT_INVALID
+    err = capsys.readouterr().err
+    assert "not a valid schema-v1 report" in err
+
+
+def test_seed_report_diffs_clean_against_itself():
+    """The committed BENCH reports must pass their own gate."""
+    bd = _load()
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    seeds = sorted(repo.glob("BENCH_*.json"))
+    assert seeds, "no committed BENCH_*.json found"
+    for seed in seeds:
+        assert bd.main([str(seed), str(seed)]) == bd.EXIT_OK

@@ -63,3 +63,17 @@ def test_linter_fires_in_benchmarks_and_obs(tmp_path):
     violations = linter.find_violations(tmp_path)
     assert {v[0] for v in violations} == {
         "benchmarks/rogue_bench.py", "src/repro/obs/rogue_obs.py"}
+
+
+def test_linter_fires_in_tuning(tmp_path):
+    """src/repro/tuning/ is inside the lint scope: the autotuner calls
+    kernels but must never touch version-sensitive JAX symbols
+    directly (plan resolution has to work without importing jax)."""
+    linter = _load_linter()
+    tuning = tmp_path / "src" / "repro" / "tuning"
+    tuning.mkdir(parents=True)
+    (tuning / "rogue_tuner.py").write_text(
+        "from jax.sharding import Axis" + "Type\n")
+    violations = linter.find_violations(tmp_path)
+    assert {v[0] for v in violations} == {
+        "src/repro/tuning/rogue_tuner.py"}

@@ -1,0 +1,302 @@
+"""Jitter-aware autotuner (repro.tuning): candidates, cost model,
+plan cache, tune() round-trip, and wrapper integration.
+
+Tier-1 runs with REPRO_AUTOTUNE=0 (conftest) so kernel wrappers never
+consult a developer's cache; tests that exercise the cache path
+re-enable it with monkeypatch + a tmp REPRO_PLAN_CACHE and reset the
+process-wide cache singleton around themselves.
+"""
+import json
+
+import pytest
+
+from repro import tuning
+from repro.obs import TraceRecorder
+from repro.tuning import (DEFAULT_PROBLEMS, AttentionProblem,
+                          MatmulProblem, PlanCache, WkvProblem,
+                          analytic_cost_s, cache_key, defaults_for,
+                          enumerate_candidates, feasibility,
+                          measure_callable, measurement_count,
+                          parse_problem, plan_sig, resolve_plan,
+                          select_plan, tune, vmem_need)
+from repro.tuning.plan_cache import CACHE_SCHEMA_VERSION
+
+MM = MatmulProblem(512, 512, 512)
+ATTN = AttentionProblem(1, 256, 256, 4, 2, 64)
+WKV = WkvProblem(1, 256, 2, 64)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Fresh cache file + re-enabled autotuning + clean singleton."""
+    path = tmp_path / "plans.json"
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(path))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    tuning.reset()
+    yield path
+    tuning.reset()
+
+
+# ------------------------------------------------------------ candidates
+
+def test_defaults_reproduce_bench_plans():
+    assert defaults_for("spm_matmul", MM) == {"bm": 256, "bn": 256,
+                                              "bk": 0}
+    assert defaults_for("flash_attention", ATTN) == {"bq": 256,
+                                                     "bk": 256}
+    assert defaults_for("wkv6", WKV) == {"chunk": 128}
+
+
+def test_defaults_are_shape_safe():
+    # odd dims must still produce dividing blocks
+    p = MatmulProblem(96, 96, 96)
+    d = defaults_for("spm_matmul", p)
+    assert p.m % d["bm"] == 0 and p.n % d["bn"] == 0
+    a = AttentionProblem(1, 48, 48, 2, 2, 32)
+    da = defaults_for("flash_attention", a)
+    assert a.seq_q % da["bq"] == 0 and a.seq_k % da["bk"] == 0
+    w = WkvProblem(1, 48, 2, 32)
+    assert w.seq % defaults_for("wkv6", w)["chunk"] == 0
+
+
+@pytest.mark.parametrize("kernel,problem", [
+    ("spm_matmul", MM), ("flash_attention", ATTN), ("wkv6", WKV)])
+def test_candidates_divide_and_include_default(kernel, problem):
+    cands = enumerate_candidates(kernel, problem)
+    assert defaults_for(kernel, problem) in cands
+    for plan in cands:
+        if kernel == "spm_matmul":
+            assert problem.m % plan["bm"] == 0
+            assert problem.n % plan["bn"] == 0
+            assert plan["bk"] == 0 or problem.k % plan["bk"] == 0
+        elif kernel == "flash_attention":
+            assert problem.seq_q % plan["bq"] == 0
+            assert problem.seq_k % plan["bk"] == 0
+        else:
+            assert problem.seq % plan["chunk"] == 0
+
+
+def test_parse_problem_round_trip():
+    assert parse_problem("spm_matmul", "512x512x512") == MM
+    assert parse_problem("flash_attention", "1x256x4x2x64") == ATTN
+    assert parse_problem("wkv6", "1x256x2x64") == WKV
+    with pytest.raises(ValueError):
+        parse_problem("spm_matmul", "512x512")
+
+
+# ------------------------------------------------------------ cost model
+
+def test_vmem_feasibility_rejects_oversized_plans():
+    huge = MatmulProblem(16384, 16384, 16384)
+    fat = {"bm": 16384, "bn": 16384, "bk": 0}
+    assert not feasibility("spm_matmul", huge, fat).fits
+    thin = {"bm": 128, "bn": 128, "bk": 512}
+    assert feasibility("spm_matmul", huge, thin).fits
+    assert vmem_need("spm_matmul", huge, fat) \
+        > vmem_need("spm_matmul", huge, thin)
+
+
+def test_analytic_cost_prefers_coarser_blocking():
+    # finer blocks re-stream A more often AND run a longer grid, so
+    # the model must rank them strictly worse on the resident-B path
+    coarse = analytic_cost_s("spm_matmul", MM,
+                             {"bm": 512, "bn": 512, "bk": 0})
+    fine = analytic_cost_s("spm_matmul", MM,
+                           {"bm": 128, "bn": 128, "bk": 0})
+    assert 0 < coarse < fine
+
+
+def test_cost_positive_for_all_bench_candidates():
+    for kernel, problem in DEFAULT_PROBLEMS.items():
+        for plan in enumerate_candidates(kernel, problem):
+            assert analytic_cost_s(kernel, problem, plan) > 0
+
+
+# ------------------------------------------------------- jitter selection
+
+def _stats(samples):
+    from repro.obs import jitter_stats
+    return jitter_stats(samples)
+
+
+def test_select_plan_prefers_low_p99():
+    fast = ({"bm": 1}, _stats([100.0, 101.0, 102.0]))
+    slow = ({"bm": 2}, _stats([200.0, 201.0, 202.0]))
+    plan, _ = select_plan([slow, fast])
+    assert plan == {"bm": 1}
+
+
+def test_select_plan_cov_tie_break():
+    # within 5% p99 tie window: steadier plan wins despite higher mean
+    steady = ({"bm": 1}, _stats([103.0, 103.0, 103.0, 103.0]))
+    jittery = ({"bm": 2}, _stats([80.0, 100.0, 100.0, 104.0]))
+    plan, _ = select_plan([steady, jittery], tie_rel=0.05)
+    assert plan == {"bm": 1}
+
+
+def test_measure_callable_records_spans():
+    rec = TraceRecorder()
+    stats = measure_callable(lambda: None, reps=3, warmup=1, trace=rec)
+    assert stats.n == 3
+    assert measurement_count(rec) == 3
+
+
+# -------------------------------------------------------------- plan cache
+
+def test_plan_cache_round_trip(tmp_path):
+    path = tmp_path / "c.json"
+    c1 = PlanCache(str(path))
+    c1.put("k|sig|env", {"bm": 128}, kernel="spm_matmul")
+    c1.save()
+    c2 = PlanCache(str(path))
+    assert c2.get("k|sig|env") == {"bm": 128}
+    assert c2.hits == 1
+    entry = c2.entry("k|sig|env")
+    assert entry["kernel"] == "spm_matmul"
+    assert "tuned_at" in entry and "env" in entry
+    assert c2.get("missing") is None and c2.misses == 1
+
+
+def test_corrupt_cache_degrades_to_defaults(tmp_path):
+    path = tmp_path / "c.json"
+    path.write_text("{not json at all", encoding="utf-8")
+    cache = PlanCache(str(path))
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        assert cache.get("anything") is None
+    # and a wrong-schema file likewise
+    path2 = tmp_path / "c2.json"
+    path2.write_text(json.dumps({"schema_version": 999, "plans": {}}),
+                     encoding="utf-8")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        assert PlanCache(str(path2)).get("x") is None
+
+
+def test_mis_shaped_entry_warns_and_misses(tmp_path):
+    path = tmp_path / "c.json"
+    path.write_text(json.dumps({
+        "schema_version": CACHE_SCHEMA_VERSION,
+        "plans": {"bad": {"plan": {"bm": "big"}}}}), encoding="utf-8")
+    cache = PlanCache(str(path))
+    with pytest.warns(RuntimeWarning, match="mis-shaped"):
+        assert cache.get("bad") is None
+    assert cache.misses == 1
+
+
+# ---------------------------------------------------------- tune round-trip
+
+def test_tune_round_trip_zero_measurements_on_warm_cache(tmp_cache):
+    problem = MatmulProblem(64, 64, 64)
+    trace1 = TraceRecorder()
+    r1 = tune("spm_matmul", problem, reps=2, warmup=1,
+              interpret=True, trace=trace1)
+    assert r1.source == "measured"
+    assert r1.measured == measurement_count(trace1) > 0
+    assert tmp_cache.exists()
+
+    # fresh cache object (same file): zero measurements, same plan
+    trace2 = TraceRecorder()
+    r2 = tune("spm_matmul", problem, cache=PlanCache(str(tmp_cache)),
+              reps=2, warmup=1, interpret=True, trace=trace2)
+    assert r2.source == "cache"
+    assert r2.measured == 0
+    assert measurement_count(trace2) == 0
+    assert r2.plan == r1.plan
+
+
+def test_tune_force_remeasures(tmp_cache):
+    problem = WkvProblem(1, 64, 1, 32)
+    tune("wkv6", problem, reps=1, interpret=True)
+    trace = TraceRecorder()
+    r = tune("wkv6", problem, reps=1, interpret=True, force=True,
+             trace=trace)
+    assert r.source == "measured"
+    assert measurement_count(trace) > 0
+
+
+# --------------------------------------------------------- plan resolution
+
+def test_resolve_plan_precedence(tmp_cache):
+    problem = MatmulProblem(512, 512, 512)
+    # no cache entry: defaults
+    assert resolve_plan("spm_matmul", problem,
+                        {"bm": None, "bn": None, "bk": None}) \
+        == {"bm": 256, "bn": 256, "bk": 0}
+    # cached plan overlays defaults
+    cache = tuning.active_cache()
+    cache.put(cache_key("spm_matmul", problem),
+              {"bm": 512, "bn": 512, "bk": 0})
+    assert resolve_plan("spm_matmul", problem,
+                        {"bm": None, "bn": None, "bk": None}) \
+        == {"bm": 512, "bn": 512, "bk": 0}
+    # explicit args beat the cache, merging with it per-param
+    assert resolve_plan("spm_matmul", problem,
+                        {"bm": 128, "bn": None, "bk": None}) \
+        == {"bm": 128, "bn": 512, "bk": 0}
+
+
+def test_resolve_plan_disabled_ignores_cache(tmp_cache, monkeypatch):
+    problem = MatmulProblem(512, 512, 512)
+    tuning.active_cache().put(cache_key("spm_matmul", problem),
+                              {"bm": 512, "bn": 512, "bk": 0})
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    assert resolve_plan("spm_matmul", problem,
+                        {"bm": None, "bn": None, "bk": None}) \
+        == {"bm": 256, "bn": 256, "bk": 0}
+
+
+def test_wrapper_consults_cache(tmp_cache):
+    """End-to-end: a tuned plan in the cache changes nothing about the
+    result but is actually consulted by the public wrapper."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.spm_matmul.ops import matmul
+    from repro.kernels.spm_matmul.ref import matmul_ref
+    problem = MatmulProblem(128, 128, 128)
+    tuning.active_cache().put(cache_key("spm_matmul", problem),
+                              {"bm": 64, "bn": 64, "bk": 0})
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(ka, (128, 128))
+    b = jax.random.normal(kb, (128, 128))
+    hits0 = tuning.active_cache().hits
+    got = matmul(a, b, interpret=True)
+    assert tuning.active_cache().hits == hits0 + 1
+    assert jnp.allclose(got, matmul_ref(a, b), atol=1e-4)
+
+
+# --------------------------------------------------------------- registry
+
+def test_registry_tune_specs_and_conformance_agree():
+    from repro.kernels import KERNEL_REGISTRY, conformance_cases
+    from repro.tuning.candidates import TUNE_SPECS
+    assert set(KERNEL_REGISTRY) == set(TUNE_SPECS) \
+        == set(DEFAULT_PROBLEMS) \
+        == {c.kernel for c in conformance_cases()}
+    for name, entry in KERNEL_REGISTRY.items():
+        assert set(entry.plan_params) \
+            == set(TUNE_SPECS[name].param_names)
+        # defaults emit exactly the registered params
+        assert set(defaults_for(name, DEFAULT_PROBLEMS[name])) \
+            == set(entry.plan_params)
+
+
+def test_plan_sig_is_canonical():
+    assert plan_sig({"bn": 512, "bm": 256, "bk": 0}) \
+        == "bk0.bm256.bn512"
+
+
+# ------------------------------------------------------------------- slow
+
+@pytest.mark.slow
+def test_exhaustive_candidate_sweep_measures_consistently(tmp_cache):
+    """Every feasible candidate on the bench shapes runs and returns
+    finite stats (not tier-1: measures dozens of plans)."""
+    from repro.tuning import make_runner
+    for kernel, problem in DEFAULT_PROBLEMS.items():
+        for plan in enumerate_candidates(kernel, problem):
+            if not feasibility(kernel, problem, plan).fits:
+                continue
+            stats = measure_callable(
+                make_runner(kernel, problem, plan, interpret=True),
+                reps=2, warmup=1)
+            assert stats.mean > 0 and stats.p99 > 0
