@@ -54,7 +54,10 @@ class StragglerMonitor:
         self._t0 = time.monotonic()
 
     def step_end(self, step: int) -> bool:
+        if self._t0 is None:      # no matching step_start(): nothing to
+            return False          # measure — don't poison the EWMA
         dt = time.monotonic() - self._t0
+        self._t0 = None
         is_straggler = (self._mean is not None
                         and dt > self.threshold * self._mean)
         if is_straggler:
@@ -81,7 +84,14 @@ def elastic_remesh_plan(n_devices: int, model_parallel: int = 16,
     Keeps the model axis fixed (weight shards must still fit) and
     shrinks the data axis — surviving hosts re-shard via checkpoint
     restore; the global batch is kept by raising per-device batch or
-    gradient accumulation (reported in the plan)."""
+    gradient accumulation (reported in the plan).
+
+    Invariants (chaos-tested): devices_used + devices_idle ==
+    n_devices and grad_accum_factor >= 1, for any n_devices >= 0."""
+    if n_devices <= 0:            # total outage: nothing schedulable
+        return {"data": 0, "model": 0,
+                "devices_used": 0, "devices_idle": n_devices,
+                "grad_accum_factor": 1}
     if n_devices < model_parallel:
         # degrade model parallelism to the largest power-of-two <= n
         mp = 1
@@ -89,6 +99,10 @@ def elastic_remesh_plan(n_devices: int, model_parallel: int = 16,
             mp *= 2
         model_parallel = mp
     data = max(min_data, n_devices // model_parallel)
+    if data * model_parallel > n_devices:
+        raise ValueError(
+            f"min_data={min_data} needs {data * model_parallel} devices "
+            f"but only {n_devices} survive")
     used = data * model_parallel
     return {
         "data": data, "model": model_parallel,
