@@ -1,0 +1,39 @@
+"""Resilience: deterministic chaos + the recovery machinery it tests.
+
+The MultiVic doctrine — enumerate every scenario statically so nothing
+at runtime is a surprise — applied to failures instead of timing:
+
+- ``chaos``    — seeded :class:`FaultPlan` fault injection (preemption,
+  checkpoint/plan-cache corruption, stragglers, NaN losses, transient
+  I/O errors) plus the corruption primitives; every injection is an
+  ``obs`` instant so traces show fault and recovery side by side.
+- ``retry``    — :func:`retry_transient`, jittered-exponential-backoff
+  retry for transient I/O (checkpoint writes, plan-cache reads).
+- ``deadline`` — :class:`DeadlineMonitor`, the WCET-derived per-step
+  deadline with the record → warn → shed degradation ladder used by
+  ``launch/serve``.
+
+Accelerator-free by policy (enforced by tests/test_repo_hygiene.py):
+fault planning and degradation policy import no jax.
+"""
+from repro.resilience.chaos import (CKPT_CORRUPT_MODES, FAULT_KINDS,
+                                    Fault, FaultPlan, TransientIOFault,
+                                    apply_offline_fault,
+                                    corrupt_checkpoint,
+                                    corrupt_plan_cache)
+from repro.resilience.deadline import DeadlineMonitor
+from repro.resilience.retry import RetriesExhausted, retry_transient
+
+__all__ = [
+    "CKPT_CORRUPT_MODES",
+    "FAULT_KINDS",
+    "DeadlineMonitor",
+    "Fault",
+    "FaultPlan",
+    "RetriesExhausted",
+    "TransientIOFault",
+    "apply_offline_fault",
+    "corrupt_checkpoint",
+    "corrupt_plan_cache",
+    "retry_transient",
+]
