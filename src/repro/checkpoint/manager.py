@@ -4,7 +4,19 @@ Guarantees:
   * atomicity: a checkpoint directory is written under a tmp name and
     os.rename'd into place — a crash mid-save never corrupts `latest`,
   * async: saves run on a background thread from host copies so the
-    train loop isn't blocked (`save(..., blocking=False)`),
+    train loop isn't blocked (`save(..., blocking=False)`); a failed
+    background save is never silent — the exception is captured and
+    re-raised from the next `wait()` (or the `save()` that implies it),
+  * integrity: `manifest.json` carries a CRC32 per leaf, verified on
+    restore; a corrupt/truncated/partial checkpoint raises
+    :class:`CheckpointCorruptError`,
+  * self-healing restore: `restore(step=None)` walks checkpoints
+    newest-first and falls back to the newest *intact* one when
+    `latest` or a step dir is damaged (every fallback is an obs
+    instant on the ``ckpt`` track),
+  * transient-I/O tolerance: every read/write primitive is wrapped in
+    `resilience.retry_transient` (OSError family only — corruption is
+    not transient and is never retried),
   * re-mesh restore: arrays are stored UNSHARDED per leaf (gathered to
     host); restore applies whatever shardings the new mesh prescribes,
     so an elastic restart on a different device count just works,
@@ -20,10 +32,19 @@ import os
 import pathlib
 import shutil
 import threading
-from typing import Any, Optional
+import warnings
+import zlib
+from typing import Any, Callable, List, Optional
 
 import jax
 import numpy as np
+
+from repro.resilience.retry import retry_transient
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (bad manifest,
+    missing/truncated array file, or checksum mismatch)."""
 
 
 def _bits_dtype(dt: np.dtype) -> np.dtype:
@@ -31,12 +52,54 @@ def _bits_dtype(dt: np.dtype) -> np.dtype:
             8: np.uint64}[dt.itemsize]
 
 
+def _storage_view(leaf: np.ndarray) -> np.ndarray:
+    """ml_dtypes (bfloat16 etc.) don't survive np.save; store the raw
+    bits as a same-width integer view, dtype in manifest."""
+    if leaf.dtype.kind not in "fiub":
+        return leaf.view(_bits_dtype(leaf.dtype))
+    if str(leaf.dtype) == "bfloat16":
+        return leaf.view(np.uint16)
+    return leaf
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep_n: int = 3):
+    def __init__(self, directory: str, keep_n: int = 3,
+                 trace: Optional[Any] = None,
+                 io_attempts: int = 3, io_base_delay: float = 0.005):
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_n = keep_n
+        self.trace = trace              # obs.TraceRecorder (or None)
+        self.io_attempts = io_attempts
+        self.io_base_delay = io_base_delay
+        # chaos seam: called as hook(op, path) before each I/O
+        # primitive; a TransientIOFault here must be absorbed by the
+        # retry wrapper below
+        self.fault_hook: Optional[Callable[[str, Any], None]] = None
         self._thread: Optional[threading.Thread] = None
+        self._bg_error: Optional[BaseException] = None
+
+    # ----------------------------------------------------------- obs/io
+
+    def _instant(self, name: str, **args: Any) -> None:
+        if self.trace is not None:
+            self.trace.instant(name, track="ckpt", **args)
+
+    def _io(self, op: str, path: Any, fn: Callable[[], Any]) -> Any:
+        """One retried I/O primitive; retries emit ``io_retry``
+        instants so recoveries show up in the trace."""
+        def attempt():
+            if self.fault_hook is not None:
+                self.fault_hook(op, path)
+            return fn()
+
+        return retry_transient(
+            attempt, attempts=self.io_attempts,
+            base_delay=self.io_base_delay,
+            give_up_on=(FileNotFoundError,),
+            on_retry=lambda k, e, d: self._instant(
+                "io_retry", op=op, attempt=k, error=str(e),
+                backoff_s=d))
 
     # ------------------------------------------------------------- save
 
@@ -47,13 +110,24 @@ class CheckpointManager:
             self._write(step, host_tree)
             return
         self._thread = threading.Thread(
-            target=self._write, args=(step, host_tree), daemon=True)
+            target=self._write_bg, args=(step, host_tree), daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join any in-flight background save; if it failed, re-raise
+        its exception here (a lost checkpoint must never be silent)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._bg_error is not None:
+            err, self._bg_error = self._bg_error, None
+            raise err
+
+    def _write_bg(self, step: int, host_tree: Any) -> None:
+        try:
+            self._write(step, host_tree)
+        except BaseException as e:          # noqa: BLE001 — re-raised
+            self._bg_error = e              # from wait()
 
     def _write(self, step: int, host_tree: Any) -> None:
         leaves, treedef = jax.tree.flatten(host_tree)
@@ -62,23 +136,26 @@ class CheckpointManager:
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
+        views = [_storage_view(l) for l in leaves]
         manifest = {"step": step, "treedef": str(treedef),
                     "n_leaves": len(leaves),
-                    "dtypes": [str(l.dtype) for l in leaves]}
-        for i, leaf in enumerate(leaves):
-            # ml_dtypes (bfloat16 etc.) don't survive np.save; store the
-            # raw bits as a same-width integer view, dtype in manifest.
-            if leaf.dtype.kind not in "fiub":
-                leaf = leaf.view(_bits_dtype(leaf.dtype))
-            elif str(leaf.dtype) == "bfloat16":
-                leaf = leaf.view(np.uint16)
-            np.save(tmp / f"arr_{i}.npy", leaf, allow_pickle=False)
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
+                    "dtypes": [str(l.dtype) for l in leaves],
+                    "checksums": [zlib.crc32(np.ascontiguousarray(v)
+                                             .tobytes()) & 0xFFFFFFFF
+                                  for v in views]}
+        for i, view in enumerate(views):
+            self._io("save_array", tmp / f"arr_{i}.npy",
+                     lambda v=view, i=i: np.save(
+                         tmp / f"arr_{i}.npy", v, allow_pickle=False))
+        self._io("write_manifest", tmp / "manifest.json",
+                 lambda: (tmp / "manifest.json").write_text(
+                     json.dumps(manifest)))
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)                       # atomic publish
         (self.dir / ".latest_tmp").write_text(str(step))
         os.rename(self.dir / ".latest_tmp", self.dir / "latest")
+        self._instant("ckpt_saved", step=step, n_leaves=len(leaves))
         self._gc()
 
     def _gc(self) -> None:
@@ -93,42 +170,136 @@ class CheckpointManager:
                 for p in self.dir.glob("step_*") if p.is_dir()]
 
     def latest_step(self) -> Optional[int]:
+        """Newest step worth *trying* (the ``latest`` pointer if its
+        dir exists, else the newest step dir); deep verification
+        happens in restore."""
+        steps = self.all_steps()
         f = self.dir / "latest"
-        if not f.exists():
-            steps = self.all_steps()
-            return max(steps) if steps else None
-        step = int(f.read_text().strip())
-        return step if (self.dir / f"step_{step}").is_dir() else None
+        if f.exists():
+            try:
+                step = int(f.read_text().strip())
+            except ValueError:
+                step = None
+            if step is not None and (self.dir / f"step_{step}").is_dir():
+                return step
+        return max(steps) if steps else None
 
-    def restore(self, like_tree: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Any:
-        """Restore into the structure of like_tree; if `shardings` (a
-        matching tree of NamedShardings) is given, device_put each leaf
-        accordingly — this is the elastic re-mesh path."""
-        step = step if step is not None else self.latest_step()
-        assert step is not None, "no checkpoint found"
+    def _candidates(self) -> List[int]:
+        """Steps to try, newest-first, `latest`-pointer hint first."""
+        steps = sorted(self.all_steps(), reverse=True)
+        hint = self.latest_step()
+        if hint is not None and hint in steps:
+            steps.remove(hint)
+            steps.insert(0, hint)
+        return steps
+
+    def _read_manifest(self, d: pathlib.Path) -> dict:
+        try:
+            raw = self._io("read_manifest", d / "manifest.json",
+                           lambda: (d / "manifest.json").read_text())
+            manifest = json.loads(raw)
+        except FileNotFoundError as e:
+            raise CheckpointCorruptError(
+                f"{d}: manifest missing (partial save?)") from e
+        except ValueError as e:
+            raise CheckpointCorruptError(
+                f"{d}: manifest unreadable: {e}") from e
+        if not isinstance(manifest, dict) or "n_leaves" not in manifest:
+            raise CheckpointCorruptError(f"{d}: manifest mis-shaped")
+        return manifest
+
+    def _read_leaf(self, d: pathlib.Path, i: int,
+                   manifest: dict) -> np.ndarray:
+        path = d / f"arr_{i}.npy"
+        try:
+            arr = self._io("read_array", path,
+                           lambda: np.load(path, allow_pickle=False))
+        except FileNotFoundError as e:
+            raise CheckpointCorruptError(f"{path}: missing") from e
+        except (ValueError, EOFError) as e:
+            raise CheckpointCorruptError(
+                f"{path}: unreadable ({e})") from e
+        sums = manifest.get("checksums")
+        if sums is not None:
+            got = zlib.crc32(np.ascontiguousarray(arr)
+                             .tobytes()) & 0xFFFFFFFF
+            if got != sums[i]:
+                raise CheckpointCorruptError(
+                    f"{path}: checksum mismatch "
+                    f"({got:#010x} != {sums[i]:#010x})")
+        return arr
+
+    def verify(self, step: int) -> bool:
+        """Deep integrity check of one checkpoint; raises
+        :class:`CheckpointCorruptError` on any damage."""
         d = self.dir / f"step_{step}"
-        leaves_like, treedef = jax.tree.flatten(like_tree)
-        manifest = json.loads((d / "manifest.json").read_text())
+        if not d.is_dir():
+            raise CheckpointCorruptError(f"{d}: no such checkpoint")
+        manifest = self._read_manifest(d)
+        for i in range(manifest["n_leaves"]):
+            self._read_leaf(d, i, manifest)
+        return True
+
+    def _restore_step(self, step: int, leaves_like, shard_leaves):
+        d = self.dir / f"step_{step}"
+        if not d.is_dir():
+            raise CheckpointCorruptError(f"{d}: no such checkpoint")
+        manifest = self._read_manifest(d)
         assert manifest["n_leaves"] == len(leaves_like), (
             f"checkpoint has {manifest['n_leaves']} leaves, model needs "
             f"{len(leaves_like)}")
-        out = []
-        shard_leaves = (jax.tree.flatten(shardings)[0]
-                        if shardings is not None else [None] *
-                        len(leaves_like))
         dtypes = manifest.get("dtypes")
+        out = []
         for i, (like, sh) in enumerate(zip(leaves_like, shard_leaves)):
-            arr = np.load(d / f"arr_{i}.npy")
+            arr = self._read_leaf(d, i, manifest)
             if dtypes and str(arr.dtype) != dtypes[i]:
                 import ml_dtypes
                 arr = arr.view(np.dtype(dtypes[i]) if dtypes[i] in
                                np.sctypeDict else
                                getattr(ml_dtypes, dtypes[i]))
-            assert arr.shape == tuple(like.shape), (
-                i, arr.shape, like.shape)
+            if arr.shape != tuple(like.shape):
+                raise CheckpointCorruptError(
+                    f"{d}/arr_{i}.npy: shape {arr.shape} != "
+                    f"{tuple(like.shape)}")
             if sh is not None:
                 out.append(jax.device_put(arr, sh))
             else:
                 out.append(jax.numpy.asarray(arr, dtype=like.dtype))
-        return jax.tree.unflatten(treedef, out), step
+        return out
+
+    def restore(self, like_tree: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of like_tree; if `shardings` (a
+        matching tree of NamedShardings) is given, device_put each leaf
+        accordingly — this is the elastic re-mesh path.
+
+        With ``step=None`` this is self-healing: candidates are tried
+        newest-first and a corrupt/partial checkpoint falls back to the
+        next intact one (instant ``ckpt_fallback`` per skip).  An
+        explicit ``step`` is an exact request — corruption raises."""
+        leaves_like, treedef = jax.tree.flatten(like_tree)
+        shard_leaves = (jax.tree.flatten(shardings)[0]
+                        if shardings is not None else [None] *
+                        len(leaves_like))
+        candidates = [step] if step is not None else self._candidates()
+        assert candidates, "no checkpoint found"
+        last_err: Optional[Exception] = None
+        for i, s in enumerate(candidates):
+            try:
+                out = self._restore_step(s, leaves_like, shard_leaves)
+                self._instant("ckpt_restored", step=s,
+                              fallbacks=i)
+                return jax.tree.unflatten(treedef, out), s
+            except CheckpointCorruptError as e:
+                last_err = e
+                if step is not None:
+                    raise
+                self._instant("ckpt_fallback", bad_step=s,
+                              error=str(e))
+                warnings.warn(
+                    f"checkpoint step {s} is corrupt ({e}); "
+                    "falling back to the previous intact one",
+                    RuntimeWarning, stacklevel=2)
+        raise CheckpointCorruptError(
+            f"no intact checkpoint under {self.dir} "
+            f"(tried {candidates})") from last_err

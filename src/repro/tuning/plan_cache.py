@@ -13,7 +13,10 @@ and dtype).
 
 The cache degrades, never fails: an unreadable or mis-shaped file (or
 entry) warns once and behaves as empty, so a corrupt cache can only
-cost re-tuning — it can never take the kernels down.
+cost re-tuning — it can never take the kernels down.  Transient read
+errors (OSError family) are retried with jittered backoff via
+``resilience.retry_transient`` before the degradation kicks in, so an
+NFS blip doesn't silently discard every tuned plan.
 
 Location: ``$REPRO_PLAN_CACHE`` if set, else
 ``~/.cache/repro/tuning_plans.json``.
@@ -72,9 +75,22 @@ class PlanCache:
         self.path = pathlib.Path(raw).expanduser()
         self.hits = 0
         self.misses = 0
+        # chaos seam: called as hook("read_cache", path) before the
+        # read; a TransientIOFault here is absorbed by retry_transient
+        self.fault_hook = None
         self._plans: Optional[Dict[str, Dict[str, Any]]] = None
 
     # ------------------------------------------------------------- load
+
+    def _read_text(self) -> str:
+        from repro.resilience.retry import retry_transient
+
+        def attempt():
+            if self.fault_hook is not None:
+                self.fault_hook("read_cache", self.path)
+            return self.path.read_text(encoding="utf-8")
+
+        return retry_transient(attempt, attempts=3, base_delay=0.005)
 
     def _load(self) -> Dict[str, Dict[str, Any]]:
         if self._plans is not None:
@@ -82,13 +98,16 @@ class PlanCache:
         self._plans = {}
         if self.path.exists():
             try:
-                doc = json.loads(self.path.read_text(encoding="utf-8"))
+                doc = json.loads(self._read_text())
                 if (not isinstance(doc, dict)
                         or doc.get("schema_version") != CACHE_SCHEMA_VERSION
                         or not isinstance(doc.get("plans"), dict)):
                     raise ValueError("unrecognized plan-cache schema")
                 self._plans = dict(doc["plans"])
-            except (ValueError, OSError) as e:
+            except (ValueError, OSError, RuntimeError) as e:
+                # RuntimeError: resilience.RetriesExhausted — the
+                # transient-I/O retries gave up; still degrade, never
+                # take the kernels down
                 warnings.warn(
                     f"plan cache {self.path} unreadable ({e}); "
                     "ignoring it and falling back to default plans",
