@@ -6,13 +6,21 @@ WCET bound per step (from core.tpu_mapping) next to the measured step
 times and reports the observed jitter — the datacenter analogue of the
 paper's Fig. 4 variability measurement.
 
+The WCET bound also becomes a *deadline*: every decode step is checked
+against ``wcet * --deadline-slack`` (or an explicit ``--deadline-ms``)
+and overruns walk the resilience ladder — record, then warn, then shed
+(halve) the batch — so overload degrades on a pre-planned path instead
+of queueing unboundedly (resilience.DeadlineMonitor; summary printed
+next to the jitter stats).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --batch 4 --prompt-len 64 --gen 32
 
 Set ``REPRO_TRACE=/path/serve.json`` to record the prefill and every
 decode step as spans on the ``serve`` track (plus a per-step latency
-counter) and dump a Chrome trace at exit — the same knob the trainer
-and the kernel-conformance harness honor.
+counter and the ``deadline_*`` instants) and dump a Chrome trace at
+exit — the same knob the trainer and the kernel-conformance harness
+honor.
 """
 from __future__ import annotations
 
@@ -28,6 +36,28 @@ from repro.configs import get_config
 from repro.launch.train import reduced_config
 from repro.models import lm as lm_mod
 from repro.models.lm import RunOptions
+from repro.resilience.deadline import DeadlineMonitor
+
+
+def shed_batch(cfg, cache, tok, n_new: int, cache_len: int,
+               windowed: bool = False):
+    """Drop the tail of the batch (graceful degradation).
+
+    Spec-driven, not heuristic: ``lm.cache_spec`` names the logical
+    axes of every cache leaf, so we slice exactly the axis labelled
+    ``batch`` (stacked-layer caches put it at index 1, behind the
+    ``stack`` axis) and leave everything else alone."""
+    b_old = tok.shape[0]
+    assert 0 < n_new < b_old, (n_new, b_old)
+    spec = lm_mod.cache_spec(cfg, b_old, cache_len, windowed)
+
+    def shed(par, x):
+        if "batch" not in par.axes:
+            return x
+        ax = par.axes.index("batch")
+        return jax.lax.slice_in_dim(x, 0, n_new, axis=ax)
+
+    return jax.tree.map(shed, spec, cache), tok[:n_new]
 
 
 def main():
@@ -40,6 +70,13 @@ def main():
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="explicit per-step deadline; 0 = derive from "
+                         "the WCET bound")
+    ap.add_argument("--deadline-slack", type=float, default=50.0,
+                    help="deadline = WCET bound x slack (the bound "
+                         "targets the TPU mapping; on other backends "
+                         "the slack absorbs the platform gap)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -67,6 +104,18 @@ def main():
         from repro.obs import TraceRecorder
         rec = TraceRecorder(time_unit="us")
 
+    # static-schedule WCET bound for the decode matmuls on the target,
+    # computed up front so it can serve as the step deadline
+    from repro.core.tpu_mapping import tpu_matmul_schedule, tpu_wcet
+    n_p = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    sched = tpu_matmul_schedule(B, cfg.d_model, 2 * n_p // cfg.d_model,
+                                tile_m=min(128, B) if B >= 8 else 8,
+                                tile_n=512)
+    wcet_s = tpu_wcet(sched)
+    deadline_s = (args.deadline_ms / 1e3 if args.deadline_ms > 0
+                  else wcet_s * args.deadline_slack)
+    dmon = DeadlineMonitor(deadline_s=deadline_s, trace=rec)
+
     t0 = time.monotonic()
     logits, cache = jax.block_until_ready(prefill(params, batch))
     t_prefill = time.monotonic() - t0
@@ -90,22 +139,41 @@ def main():
             rec.counter("step_ms", (t2 - t1) * 1e3, track="serve")
         tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
         out.append(np.asarray(tok))
+        # deadline ladder (skip step 0: compile, already excluded from
+        # the jitter stats below for the same reason)
+        if i >= 1:
+            action = dmon.observe(i, t2 - t1)
+            if action == "warn":
+                print(f"deadline overrun at decode step {i}: "
+                      f"{(t2 - t1) * 1e3:.2f} ms > "
+                      f"{deadline_s * 1e3:.2f} ms")
+            elif action == "shed" and tok.shape[0] > 1:
+                n_new = tok.shape[0] // 2
+                print(f"deadline ladder: shedding batch "
+                      f"{tok.shape[0]} -> {n_new} at decode step {i}")
+                cache, tok = shed_batch(cfg, cache, tok, n_new, total,
+                                        opts.windowed_cache)
 
     times = np.array(times[1:])   # drop first (compile)
     print(f"prefill: {t_prefill*1e3:.1f} ms for {B}x{P} tokens")
     print(f"decode:  median {np.median(times)*1e3:.2f} ms/step  "
           f"std {times.std()*1e3:.3f} ms  "
           f"jitter(max-min) {(times.max()-times.min())*1e3:.3f} ms")
-    print(f"generated shape: {np.stack(out, 1).shape}")
+    shapes = {o.shape for o in out}
+    if len(shapes) == 1:
+        print(f"generated shape: {np.stack(out, 1).shape}")
+    else:
+        print(f"generated: {len(out)} steps, batch shed to "
+              f"{out[-1].shape[0]} (started at {B})")
 
-    # static-schedule WCET bound for the decode matmuls on the target
-    from repro.core.tpu_mapping import tpu_matmul_schedule, tpu_wcet
-    n_p = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
-    sched = tpu_matmul_schedule(B, cfg.d_model, 2 * n_p // cfg.d_model,
-                                tile_m=min(128, B) if B >= 8 else 8,
-                                tile_n=512)
     print(f"TPU-target WCET bound per step (weight pass): "
-          f"{tpu_wcet(sched)*1e3:.3f} ms")
+          f"{wcet_s*1e3:.3f} ms")
+    s = dmon.summary()
+    print(f"deadline: {s['deadline_s']*1e3:.3f} ms/step  "
+          f"overruns {s['overruns']}/{len(times)}  "
+          f"ladder record/warn/shed "
+          f"{s['n_record']}/{s['n_warn']}/{s['n_shed']}  "
+          f"worst overrun {s['worst_overrun_s']*1e3:.3f} ms")
 
     if rec is not None and rec.spans:
         from repro.obs import write_chrome_trace

@@ -107,14 +107,26 @@ def adamw_update(grads, opt_state, params, tcfg: TrainConfig,
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                     opts: Optional[lm_mod.RunOptions] = None):
-    """Returns step(params, opt_state, batch) -> (params, opt_state,
-    metrics).  Microbatching (gradient accumulation) happens via lax.scan
-    when tcfg.microbatch > 1."""
+    """Returns step(params, opt_state, batch, loss_scale=1.0) ->
+    (params, opt_state, metrics).  Microbatching (gradient
+    accumulation) happens via lax.scan when tcfg.microbatch > 1.
+
+    Non-finite guard: if the (scaled) loss or the gradient norm comes
+    out NaN/Inf — a transient numeric fault, real or injected via
+    ``loss_scale`` — the update is discarded inside the jitted step
+    (params/opt_state pass through unchanged, bit-exact) and
+    ``metrics["finite"]`` is 0; the trainer retries the step.  On the
+    healthy path the select keeps the freshly computed leaves, so
+    finite steps are bit-identical to the unguarded step."""
     opts = opts or lm_mod.DEFAULT_OPTS
     lr_fn = cosine_lr(tcfg)
-    loss_fn = lambda p, b: lm_mod.train_loss(cfg, p, b, opts)
+    base_loss_fn = lambda p, b: lm_mod.train_loss(cfg, p, b, opts)
 
-    def step(params, opt_state, batch):
+    def step(params, opt_state, batch, loss_scale=1.0):
+        # scale *inside* the differentiated function so a NaN scale
+        # poisons gradients too (the realistic fault shape); scale 1.0
+        # is an IEEE no-op, keeping healthy steps bit-exact
+        loss_fn = lambda p, b: base_loss_fn(p, b) * loss_scale
         if tcfg.microbatch and tcfg.microbatch > 1:
             nm = tcfg.microbatch
 
@@ -138,9 +150,13 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             grads = jax.tree.map(lambda g: g / nm, grads)
         else:
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        params, opt_state, info = adamw_update(grads, opt_state, params,
-                                               tcfg, lr_fn)
-        metrics = {"loss": loss, **info}
-        return params, opt_state, metrics
+        p_new, s_new, info = adamw_update(grads, opt_state, params,
+                                          tcfg, lr_fn)
+        finite = jnp.isfinite(loss) & jnp.isfinite(info["grad_norm"])
+        keep = lambda new, old: jnp.where(finite, new, old)
+        p_out = jax.tree.map(keep, p_new, params)
+        s_out = jax.tree.map(keep, s_new, opt_state)
+        metrics = {"loss": loss, "finite": finite, **info}
+        return p_out, s_out, metrics
 
     return step

@@ -1,11 +1,15 @@
 """The fault-tolerant training runtime.
 
 Wires together: model (models/), optimizer (optim/), data (data/),
-checkpointing (checkpoint/) and the fault handlers (runtime/fault.py).
-Designed so a preempted/crashed job relaunched with `Trainer.run()`
-resumes bit-exact: deterministic data (pure function of step), full
+checkpointing (checkpoint/), the fault handlers (runtime/fault.py) and
+the chaos harness (resilience/chaos.py).  Designed so a
+preempted/crashed job relaunched with `Trainer.run()` resumes
+bit-exact: deterministic data (pure function of step), full
 (params, opt_state, step) in the checkpoint, periodic + preemption
-saves.
+saves, and a non-finite-loss guard that *retries* a poisoned step
+instead of skipping its batch — a transient NaN therefore changes
+nothing about the final parameters, which is what lets the chaos soak
+test demand bit-exact equality against an undisturbed run.
 """
 from __future__ import annotations
 
@@ -20,7 +24,16 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.models import lm as lm_mod
 from repro.optim.adamw import adamw_init, make_train_step
+from repro.resilience.chaos import (FaultPlan, TransientIOFault,
+                                    corrupt_checkpoint,
+                                    corrupt_plan_cache)
 from repro.runtime.fault import PreemptionGuard, StragglerMonitor
+
+
+class NonFiniteLossError(RuntimeError):
+    """K consecutive non-finite losses: the divergence is persistent,
+    not transient — aborting beats looping forever on a poisoned
+    step."""
 
 
 @dataclass
@@ -41,13 +54,18 @@ class Trainer:
     log_every: int = 10
     on_metrics: Optional[Callable[[int, Dict], None]] = None
     trace: Optional[Any] = None     # obs.TraceRecorder (wall-clock us)
+    chaos: Optional[FaultPlan] = None   # resilience: fault injection
+    max_nonfinite: int = 3          # consecutive bad steps -> abort
 
     def __post_init__(self):
         self.dataset = SyntheticLMDataset(self.dcfg)
-        self.ckpt = (CheckpointManager(self.ckpt_dir)
+        self.ckpt = (CheckpointManager(self.ckpt_dir, trace=self.trace)
                      if self.ckpt_dir else None)
         self.guard = PreemptionGuard()
         self.straggler = StragglerMonitor(trace=self.trace)
+        if self.chaos is not None and self.chaos.trace is None:
+            self.chaos.trace = self.trace
+        self.nonfinite_steps: List[int] = []
         self._step_fn = jax.jit(
             make_train_step(self.cfg, self.tcfg, self.opts),
             donate_argnums=(0, 1))
@@ -66,24 +84,77 @@ class Trainer:
             return TrainerState(restored["params"], restored["opt"], step)
         return state
 
+    # ------------------------------------------------------------ chaos
+
+    def _apply_faults(self, step: int) -> float:
+        """Fire the fault plan's injections for this step; returns the
+        loss_scale to feed the train step (NaN for a poisoned step)."""
+        scale = 1.0
+        for f in self.chaos.take(step):
+            if f.kind == "nan_loss":
+                scale = float("nan")
+            elif f.kind == "preempt":
+                self.guard.trigger_for_test()
+            elif f.kind == "straggler":
+                time.sleep(f.duration_s)
+            elif f.kind == "io_error" and self.ckpt:
+                self.ckpt.fault_hook = TransientIOFault(count=f.count)
+            elif f.kind == "ckpt_corrupt" and self.ckpt:
+                self.ckpt.wait()    # damage a *published* checkpoint
+                corrupt_checkpoint(self.ckpt.dir,
+                                   mode=f.mode or "array",
+                                   rng=self.chaos.rng)
+            elif f.kind == "cache_corrupt":
+                import os
+
+                from repro.tuning.plan_cache import (DEFAULT_CACHE_PATH,
+                                                     CACHE_PATH_ENV)
+                corrupt_plan_cache(
+                    os.environ.get(CACHE_PATH_ENV, DEFAULT_CACHE_PATH),
+                    mode=f.mode or "garbage")
+        return scale
+
     # -------------------------------------------------------------- run
 
     def run(self, num_steps: int) -> Dict[str, List[float]]:
         state = self.restore_or_init()
         history: Dict[str, List[float]] = {"loss": [], "step_s": []}
         t_wall = time.monotonic()
+        consecutive_nonfinite = 0
         while state.step < num_steps:
+            scale = (self._apply_faults(state.step)
+                     if self.chaos is not None else 1.0)
             batch = self.dataset.batch_at(state.step)
             self.straggler.step_start()
             if self.trace is not None:
                 self.trace.begin(f"step{state.step}", track="trainer",
                                  cat="train_step", step=state.step)
             params, opt, metrics = self._step_fn(
-                state.params, state.opt_state, batch)
+                state.params, state.opt_state, batch, scale)
             loss = float(metrics["loss"])   # blocks on device results
+            finite = bool(metrics.get("finite", True))
             if self.trace is not None:
                 self.trace.end("trainer")
                 self.trace.counter("loss", loss)
+            if not finite:
+                # update was discarded in-step; retry the same step —
+                # the batch is a pure function of the step counter, so
+                # a transient fault leaves the trajectory untouched
+                consecutive_nonfinite += 1
+                self.nonfinite_steps.append(state.step)
+                state = TrainerState(params, opt, state.step)
+                self.straggler.step_end(state.step)
+                if self.trace is not None:
+                    self.trace.instant(
+                        "nonfinite_skipped", track="trainer",
+                        step=state.step, loss=loss,
+                        consecutive=consecutive_nonfinite)
+                if consecutive_nonfinite >= self.max_nonfinite:
+                    raise NonFiniteLossError(
+                        f"{consecutive_nonfinite} consecutive "
+                        f"non-finite losses at step {state.step}")
+                continue
+            consecutive_nonfinite = 0
             state = TrainerState(params, opt, state.step + 1)
             slow = self.straggler.step_end(state.step)
             history["loss"].append(loss)
