@@ -1,0 +1,125 @@
+"""Chaos soak: the recovery paths must *compose*, not just exist.
+
+A trainer run under a multi-fault plan — NaN-poisoned step, transient
+checkpoint-I/O errors, preemption mid-save, then the newest checkpoint
+corrupted on disk before relaunch — must resume and reach final
+parameters BIT-EXACT equal to an undisturbed reference run.  This is
+the paper's predictability doctrine applied to failures: every fault
+is an anticipated scenario with a deterministic recovery path, so the
+trajectory is invariant under the whole plan.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import DataConfig
+from repro.models.lm import RunOptions
+from repro.obs import TraceRecorder, to_chrome_trace
+from repro.resilience import Fault, FaultPlan, apply_offline_fault
+from repro.runtime.trainer import NonFiniteLossError, Trainer
+
+
+def _trainer(tmp=None, steps=12, **kw):
+    cfg = tiny_cfg("qwen2-0.5b", num_layers=1, d_model=64, d_ff=128,
+                   vocab_size=64, vocab_pad_multiple=64)
+    tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=2,
+                       total_steps=steps, seed=0)
+    dcfg = DataConfig(vocab_size=64, global_batch=4, seq_len=16)
+    opts = RunOptions(chunk_q=16, chunk_kv=16, loss_chunk=16,
+                      remat=False)
+    return Trainer(cfg, tcfg, dcfg, ckpt_dir=tmp, ckpt_every=3,
+                   opts=opts, log_every=0, **kw)
+
+
+def _bits(params):
+    return [np.asarray(l).tobytes() for l in jax.tree.leaves(params)]
+
+
+def test_nan_injection_is_invisible_in_final_params(tmp_path):
+    """A transient NaN step is retried, not skipped: the poisoned
+    update is discarded in-step and the retry sees the same batch, so
+    the final parameters carry no imprint of the fault."""
+    ref = _trainer(steps=6)
+    ref.run(6)
+
+    rec = TraceRecorder()
+    plan = FaultPlan([Fault(2, "nan_loss")])
+    tr = _trainer(steps=6, chaos=plan, trace=rec)
+    tr.run(6)
+
+    assert tr.nonfinite_steps == [2]
+    assert _bits(tr.final_state.params) == _bits(ref.final_state.params)
+    names = [i.name for i in rec.instants]
+    assert "chaos_nan_loss" in names and "nonfinite_skipped" in names
+
+
+def test_persistent_nonfinite_aborts(tmp_path):
+    plan = FaultPlan([Fault(1, "nan_loss")])
+    tr = _trainer(steps=6, chaos=plan, max_nonfinite=1)
+    with pytest.raises(NonFiniteLossError):
+        tr.run(6)
+
+
+def test_chaos_soak_resumes_bit_exact(tmp_path):
+    N = 12
+    # ---- undisturbed reference ------------------------------------
+    ref = _trainer(str(tmp_path / "ref"), N)
+    ref.run(N)
+
+    # ---- phase 1: NaN step + transient ckpt I/O + preempt mid-save
+    rec1 = TraceRecorder()
+    plan = FaultPlan([
+        Fault(4, "nan_loss"),
+        Fault(5, "io_error", count=2),   # hits the step-6 bg save
+        Fault(7, "preempt"),
+    ], seed=3, trace=rec1)
+    tr1 = _trainer(str(tmp_path / "chaos"), N, trace=rec1, chaos=plan)
+    tr1.run(N)
+    assert plan.done()
+    assert tr1.final_state.step == 8     # preempted, exited cleanly
+    assert tr1.nonfinite_steps == [4]
+
+    names1 = [i.name for i in rec1.instants]
+    for expected in ("chaos_nan_loss", "chaos_io_error",
+                     "chaos_preempt", "nonfinite_skipped", "io_retry",
+                     "ckpt_saved"):
+        assert expected in names1, (expected, names1)
+
+    # ---- crash window: the newest checkpoint is damaged on disk ---
+    rec2 = TraceRecorder()
+    hit = apply_offline_fault(
+        Fault(8, "ckpt_corrupt", mode="truncate"),
+        ckpt_dir=tmp_path / "chaos", trace=rec2)
+    assert hit == 8
+
+    # ---- phase 2: relaunch; restore must fall back to intact step 6
+    tr2 = _trainer(str(tmp_path / "chaos"), N, trace=rec2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        tr2.run(N)
+    assert tr2.final_state.step == N
+
+    names2 = [i.name for i in rec2.instants]
+    assert "chaos_ckpt_corrupt" in names2
+    assert "ckpt_fallback" in names2     # step 8 rejected
+    assert "ckpt_restored" in names2     # step 6 accepted
+    restored = [i for i in rec2.instants if i.name == "ckpt_restored"]
+    assert dict(restored[0].args)["step"] == 6
+
+    # ---- the whole composition is invisible: bit-exact equality ---
+    assert _bits(tr2.final_state.params) == _bits(ref.final_state.params)
+    assert _bits(tr2.final_state.opt_state) == _bits(
+        ref.final_state.opt_state)
+
+    # every fault and recovery survives export to the Chrome trace
+    events = {e["name"] for rec in (rec1, rec2)
+              for e in to_chrome_trace(rec)["traceEvents"]
+              if e.get("ph") == "i"}
+    assert {"chaos_nan_loss", "chaos_io_error", "chaos_preempt",
+            "chaos_ckpt_corrupt", "nonfinite_skipped", "io_retry",
+            "ckpt_saved", "ckpt_fallback",
+            "ckpt_restored"} <= events

@@ -1,0 +1,305 @@
+"""Resilience layer: retry/backoff, fault taxonomy, deadline ladder,
+checkpoint integrity + fallback, plan-cache degradation — every
+recovery path pushed through a real injected failure (the chaos-soak
+composition lives in tests/test_chaos_soak.py)."""
+import json
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (CheckpointCorruptError,
+                                      CheckpointManager)
+from repro.obs import TraceRecorder, to_chrome_trace
+from repro.resilience import (DeadlineMonitor, Fault, FaultPlan,
+                              RetriesExhausted, TransientIOFault,
+                              apply_offline_fault, corrupt_checkpoint,
+                              corrupt_plan_cache, retry_transient)
+
+# ------------------------------------------------------------- retry
+
+
+def test_retry_transient_recovers_and_reports():
+    calls, retries = [], []
+    flaky = TransientIOFault(count=2)
+
+    def fn():
+        calls.append(1)
+        flaky("read", "x")
+        return 42
+
+    out = retry_transient(fn, attempts=3, base_delay=0.0,
+                          on_retry=lambda k, e, d: retries.append(k),
+                          sleep=lambda s: None)
+    assert out == 42 and len(calls) == 3 and retries == [1, 2]
+
+
+def test_retry_transient_exhaustion_wraps_last_error():
+    flaky = TransientIOFault(count=99)
+    with pytest.raises(RetriesExhausted) as ei:
+        retry_transient(lambda: flaky("read", "x"), attempts=3,
+                        base_delay=0.0, sleep=lambda s: None)
+    assert isinstance(ei.value.__cause__, OSError)
+
+
+def test_retry_transient_does_not_catch_corruption():
+    # corruption is not transient: non-OSError types pass straight out
+    def fn():
+        raise ValueError("checksum mismatch")
+
+    with pytest.raises(ValueError):
+        retry_transient(fn, attempts=5, base_delay=0.0,
+                        sleep=lambda s: None)
+
+
+def test_retry_backoff_is_exponential_and_capped():
+    delays = []
+    flaky = TransientIOFault(count=4)
+    retry_transient(lambda: flaky("w", "x"), attempts=5,
+                    base_delay=0.01, max_delay=0.03, jitter=0.0,
+                    sleep=delays.append)
+    assert delays == [0.01, 0.02, 0.03, 0.03]
+
+
+# ------------------------------------------------------- fault plans
+
+
+def test_fault_plan_is_one_shot_and_traced():
+    rec = TraceRecorder()
+    plan = FaultPlan([Fault(2, "nan_loss"), Fault(2, "straggler",
+                                                  duration_s=0.5),
+                      Fault(5, "preempt")], seed=7, trace=rec)
+    assert [f.kind for f in plan.take(2)] == ["nan_loss", "straggler"]
+    assert plan.take(2) == []          # one-shot: the retry is clean
+    assert not plan.done()
+    assert [f.kind for f in plan.take(5)] == ["preempt"]
+    assert plan.done()
+    names = [i.name for i in rec.instants]
+    assert names == ["chaos_nan_loss", "chaos_straggler",
+                     "chaos_preempt"]
+    assert all(i.track == "chaos" for i in rec.instants)
+
+
+def test_fault_kind_is_validated():
+    with pytest.raises(ValueError):
+        Fault(0, "gamma_ray")
+
+
+# --------------------------------------------------- deadline ladder
+
+
+def test_deadline_ladder_escalates_and_resets():
+    rec = TraceRecorder()
+    mon = DeadlineMonitor(deadline_s=1.0, warn_after=2, shed_after=4,
+                          trace=rec)
+    assert mon.observe(0, 0.5) == "ok"
+    # four consecutive overruns walk record -> warn -> warn -> shed
+    assert [mon.observe(i, 2.0) for i in range(1, 5)] == [
+        "record", "warn", "warn", "shed"]
+    # shed resets the consecutive count: ladder starts over
+    assert mon.observe(5, 2.0) == "record"
+    # meeting the deadline also resets
+    assert mon.observe(6, 0.9) == "ok"
+    assert mon.observe(7, 1.1) == "record"
+    s = mon.summary()
+    assert s["overruns"] == 6 and s["n_shed"] == 1
+    assert s["worst_overrun_s"] == pytest.approx(1.0)
+    names = [i.name for i in rec.instants]
+    assert names.count("deadline_shed") == 1
+    assert names.count("deadline_warn") == 2
+
+
+def test_serve_shed_batch_slices_the_batch_axis():
+    """Shedding is spec-driven: exactly the axis labelled ``batch`` in
+    lm.cache_spec shrinks (stacked-layer caches carry it at index 1),
+    every other axis is untouched."""
+    from conftest import tiny_cfg
+    from repro.launch.serve import shed_batch
+    from repro.models import lm as lm_mod
+    from repro.models.spec import is_par
+
+    cfg = tiny_cfg("qwen2-0.5b", num_layers=2)
+    B, L = 4, 24
+    cache = lm_mod.init_cache(cfg, B, L)
+    tok = jnp.zeros((B,), jnp.int32)
+    cache2, tok2 = shed_batch(cfg, cache, tok, 2, L)
+    assert tok2.shape == (2,)
+    spec = lm_mod.cache_spec(cfg, B, L)
+    import jax as _jax
+    for par, before, after in zip(
+            _jax.tree.leaves(spec, is_leaf=is_par),
+            _jax.tree.leaves(cache), _jax.tree.leaves(cache2)):
+        for ax, name in enumerate(par.axes):
+            want = 2 if name == "batch" else before.shape[ax]
+            assert after.shape[ax] == want, (par.axes, before.shape,
+                                             after.shape)
+
+
+# ------------------------------------------- checkpoint integrity
+
+
+def _tree(scale=1.0):
+    return {"w": jnp.arange(32.0).reshape(4, 8) * scale,
+            "b": jnp.ones((8,), jnp.float32) * scale,
+            "n": jnp.int32(3)}
+
+
+def test_checkpoint_checksums_written_and_verified(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, _tree())
+    manifest = json.loads(
+        (tmp_path / "step_1" / "manifest.json").read_text())
+    assert len(manifest["checksums"]) == manifest["n_leaves"] == 3
+    assert cm.verify(1) is True
+
+
+@pytest.mark.parametrize("mode", ["manifest", "array", "truncate",
+                                  "partial"])
+def test_corruption_modes_are_detected(tmp_path, mode):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, _tree())
+    corrupt_checkpoint(tmp_path, step=1, mode=mode)
+    with pytest.raises(CheckpointCorruptError):
+        cm.verify(1)
+    # explicit-step restore is an exact request: no silent fallback
+    with pytest.raises(CheckpointCorruptError):
+        cm.restore(_tree(), step=1)
+
+
+def test_restore_falls_back_to_newest_intact(tmp_path):
+    rec = TraceRecorder()
+    cm = CheckpointManager(str(tmp_path), trace=rec)
+    cm.save(1, _tree(1.0))
+    cm.save(2, _tree(2.0))
+    cm.save(3, _tree(3.0))
+    corrupt_checkpoint(tmp_path, step=3, mode="truncate")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        restored, step = cm.restore(_tree())
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(_tree(2.0)["w"]))
+    names = [i.name for i in rec.instants]
+    assert "ckpt_fallback" in names and "ckpt_restored" in names
+
+
+def test_restore_survives_bogus_latest_pointer(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, _tree(1.0))
+    corrupt_checkpoint(tmp_path, step=1, mode="latest")
+    assert cm.latest_step() == 1        # pointer ignored, dir scanned
+    _, step = cm.restore(_tree())
+    assert step == 1
+
+
+def test_restore_raises_when_everything_is_corrupt(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, _tree())
+    cm.save(2, _tree())
+    corrupt_checkpoint(tmp_path, step=1, mode="manifest")
+    corrupt_checkpoint(tmp_path, step=2, mode="array")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with pytest.raises(CheckpointCorruptError):
+            cm.restore(_tree())
+
+
+def test_background_save_error_reraised_on_wait(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.fault_hook = TransientIOFault(count=99)   # persistent failure
+    cm.io_base_delay = 0.0
+    cm.save(1, _tree(), blocking=False)
+    with pytest.raises(RetriesExhausted):
+        cm.wait()
+    # the error is consumed: a later save/wait cycle works
+    cm.fault_hook = None
+    cm.save(2, _tree(), blocking=False)
+    cm.wait()
+    assert cm.latest_step() == 2
+
+
+def test_transient_io_during_save_is_absorbed_and_traced(tmp_path):
+    rec = TraceRecorder()
+    cm = CheckpointManager(str(tmp_path), trace=rec,
+                           io_base_delay=0.0)
+    cm.fault_hook = TransientIOFault(count=2)    # < io_attempts
+    cm.save(1, _tree())
+    assert cm.verify(1) is True
+    retries = [i for i in rec.instants if i.name == "io_retry"]
+    assert len(retries) == 2
+    assert any(i.name == "ckpt_saved" for i in rec.instants)
+
+
+def test_transient_io_during_restore_is_absorbed(tmp_path):
+    cm = CheckpointManager(str(tmp_path), io_base_delay=0.0)
+    cm.save(1, _tree(5.0))
+    cm.fault_hook = TransientIOFault(count=2)
+    restored, step = cm.restore(_tree())
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(_tree(5.0)["w"]))
+
+
+# --------------------------------------------- plan-cache chaos
+
+
+def test_corrupt_plan_cache_degrades_to_empty(tmp_path):
+    from repro.tuning.plan_cache import PlanCache
+    path = tmp_path / "plans.json"
+    for mode in ("garbage", "schema"):
+        corrupt_plan_cache(path, mode=mode)
+        pc = PlanCache(str(path))
+        with pytest.warns(RuntimeWarning):
+            assert pc.get("spm_matmul|whatever|abc") is None
+        assert len(pc) == 0 and pc.misses == 1
+
+
+def test_plan_cache_transient_read_retried(tmp_path):
+    from repro.tuning.plan_cache import PlanCache
+    path = tmp_path / "plans.json"
+    pc = PlanCache(str(path))
+    pc.put("k|sig|env", {"bm": 128})
+    pc.save()
+    pc2 = PlanCache(str(path))
+    pc2.fault_hook = TransientIOFault(count=2)
+    assert pc2.get("k|sig|env") == {"bm": 128}
+    assert pc2.fault_hook.raised == 2
+
+
+def test_plan_cache_persistent_read_failure_degrades(tmp_path):
+    from repro.tuning.plan_cache import PlanCache
+    path = tmp_path / "plans.json"
+    pc = PlanCache(str(path))
+    pc.put("k|sig|env", {"bm": 128})
+    pc.save()
+    pc2 = PlanCache(str(path))
+    pc2.fault_hook = TransientIOFault(count=99)
+    with pytest.warns(RuntimeWarning):
+        assert pc2.get("k|sig|env") is None   # degraded, not crashed
+
+
+# --------------------------------------------- offline fault helper
+
+
+def test_apply_offline_fault_traces_and_damages(tmp_path):
+    rec = TraceRecorder()
+    cm = CheckpointManager(str(tmp_path / "ckpt"))
+    cm.save(4, _tree())
+    hit = apply_offline_fault(Fault(4, "ckpt_corrupt", mode="array"),
+                              ckpt_dir=cm.dir, trace=rec)
+    assert hit == 4
+    with pytest.raises(CheckpointCorruptError):
+        cm.verify(4)
+    assert [i.name for i in rec.instants] == ["chaos_ckpt_corrupt"]
+    with pytest.raises(ValueError):
+        apply_offline_fault(Fault(0, "preempt"), trace=rec)
+
+
+def test_chaos_instants_export_to_chrome_trace():
+    rec = TraceRecorder()
+    plan = FaultPlan([Fault(1, "nan_loss")], trace=rec)
+    plan.take(1)
+    doc = to_chrome_trace(rec)
+    ev = [e for e in doc["traceEvents"] if e.get("ph") == "i"]
+    assert any(e["name"] == "chaos_nan_loss" for e in ev)
