@@ -65,6 +65,21 @@ def test_linter_fires_in_benchmarks_and_obs(tmp_path):
         "benchmarks/rogue_bench.py", "src/repro/obs/rogue_obs.py"}
 
 
+def test_linter_fires_in_resilience(tmp_path):
+    """src/repro/resilience/ is inside the lint scope: the chaos
+    harness and degradation policies are accelerator-free by design,
+    so any version-sensitive JAX symbol appearing there is doubly
+    wrong."""
+    linter = _load_linter()
+    res = tmp_path / "src" / "repro" / "resilience"
+    res.mkdir(parents=True)
+    (res / "rogue_chaos.py").write_text(
+        "from jax.experimental.shard_map import shard" + "_map\n")
+    violations = linter.find_violations(tmp_path)
+    assert {v[0] for v in violations} == {
+        "src/repro/resilience/rogue_chaos.py"}
+
+
 def test_linter_fires_in_tuning(tmp_path):
     """src/repro/tuning/ is inside the lint scope: the autotuner calls
     kernels but must never touch version-sensitive JAX symbols

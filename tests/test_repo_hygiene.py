@@ -30,6 +30,39 @@ def test_no_compiled_artifacts_tracked():
     assert not bad, f"compiled artifacts tracked in git: {bad}"
 
 
+def test_every_src_package_has_init():
+    """Every directory under src/ that holds Python modules must be a
+    real package — a missing __init__.py makes modules importable in
+    the dev checkout (sys.path tricks) but invisible to an installed
+    wheel, which is exactly the kind of drift that only bites in CI."""
+    src = REPO_ROOT / "src"
+    missing = sorted(
+        str(p.relative_to(REPO_ROOT))
+        for p in src.rglob("*.py")
+        if p.name != "__init__.py"
+        and not (p.parent / "__init__.py").exists())
+    assert not missing, f"modules outside a package: {missing}"
+
+
+def test_resilience_layer_is_accelerator_free():
+    """The chaos/retry/deadline layer must stay importable without
+    jax: fault planning and degradation policy are host-side concerns,
+    and keeping them dependency-free is what lets the plan cache and
+    checkpoint code reuse them on any backend (docstring contract in
+    src/repro/resilience/__init__.py)."""
+    res = REPO_ROOT / "src" / "repro" / "resilience"
+    assert res.is_dir()
+    offenders = []
+    for p in sorted(res.glob("*.py")):
+        for lineno, line in enumerate(
+                p.read_text(encoding="utf-8").splitlines(), 1):
+            s = line.strip()
+            if s.startswith(("import jax", "from jax")):
+                offenders.append(f"{p.name}:{lineno}: {s}")
+    assert not offenders, \
+        f"resilience/ must not import jax: {offenders}"
+
+
 def test_gitignore_covers_cache_dirs_but_not_bench_reports():
     gi = (REPO_ROOT / ".gitignore").read_text(encoding="utf-8")
     rules = {line.strip() for line in gi.splitlines()
