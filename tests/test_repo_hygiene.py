@@ -34,14 +34,20 @@ def test_every_src_package_has_init():
     """Every directory under src/ that holds Python modules must be a
     real package — a missing __init__.py makes modules importable in
     the dev checkout (sys.path tricks) but invisible to an installed
-    wheel, which is exactly the kind of drift that only bites in CI."""
+    wheel, which is exactly the kind of drift that only bites in CI.
+    Every ancestor up to src/ must be a package too: an intermediate
+    directory holding only subpackages still needs __init__.py for
+    the installed-wheel import chain."""
     src = REPO_ROOT / "src"
-    missing = sorted(
-        str(p.relative_to(REPO_ROOT))
-        for p in src.rglob("*.py")
-        if p.name != "__init__.py"
-        and not (p.parent / "__init__.py").exists())
-    assert not missing, f"modules outside a package: {missing}"
+    missing = set()
+    for p in src.rglob("*.py"):
+        d = p.parent
+        while d != src:
+            if not (d / "__init__.py").exists():
+                missing.add(str(d.relative_to(REPO_ROOT)))
+            d = d.parent
+    assert not missing, \
+        f"directories missing __init__.py: {sorted(missing)}"
 
 
 def test_resilience_layer_is_accelerator_free():
@@ -53,12 +59,13 @@ def test_resilience_layer_is_accelerator_free():
     res = REPO_ROOT / "src" / "repro" / "resilience"
     assert res.is_dir()
     offenders = []
-    for p in sorted(res.glob("*.py")):
+    for p in sorted(res.rglob("*.py")):
         for lineno, line in enumerate(
                 p.read_text(encoding="utf-8").splitlines(), 1):
             s = line.strip()
             if s.startswith(("import jax", "from jax")):
-                offenders.append(f"{p.name}:{lineno}: {s}")
+                offenders.append(
+                    f"{p.relative_to(res)}:{lineno}: {s}")
     assert not offenders, \
         f"resilience/ must not import jax: {offenders}"
 
