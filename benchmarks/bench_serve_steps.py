@@ -1,0 +1,83 @@
+"""End-to-end serving-step benchmark: tuned vs default model plan.
+
+The serving analogue of bench_kernels: each problem in
+``SERVE_PROBLEMS`` is timed twice as a full prefill + decode pass —
+once under the shape-safe default serving plan and once under the
+autotuned plan (repro.tuning.tune_model — measured on a cold plan
+cache, reused with zero measurements on a warm one).  Both sides run
+AOT-compiled step programs (compilation never lands in a sample), so
+the CoV/p99 speak for the plan, not the compiler.
+
+Two rows per problem so the trajectory gate (scripts/bench_diff.py)
+tracks each side independently:
+
+  serve/<arch>_decode_default   us_per_call = default us/token
+  serve/<arch>_decode_tuned     us_per_call = tuned us/token
+
+``derived`` carries both plans, the plan source, and the plan-derived
+TPU WCET bound per decode step (core.tpu_mapping.serve_step_schedule —
+the same number the serve banner prints, because it is built from the
+same plan).
+"""
+from benchmarks.bench_kernels import REPS, WARMUP
+
+# Small enough to tune (a handful of end-to-end passes each) inside a
+# benchmark run, big enough that chunking and loop structure matter.
+SERVE_PROBLEMS = [
+    ("qwen2-0.5b", dict(batch=2, prompt_len=64, gen=8,
+                        layers=2, d_model=128, vocab=512)),
+]
+
+
+def _wcet_us(cfg, problem, plan) -> float:
+    from repro.core.tpu_mapping import serve_step_schedule, tpu_wcet
+    from repro.models.lm import param_count
+    sched = serve_step_schedule(problem.batch, cfg.d_model,
+                                param_count(cfg), plan=plan)
+    return tpu_wcet(sched) * 1e6
+
+
+def run():
+    from repro.tuning import (ModelProblem, default_model_plan,
+                              make_serve_runner, measure_callable,
+                              plan_sig, problem_config, tune_model,
+                              us_per_token)
+    rows = []
+    for arch, kw in SERVE_PROBLEMS:
+        problem = ModelProblem(arch, **kw)
+        cfg = problem_config(problem)
+        default_plan = default_model_plan(cfg, problem)
+        res = tune_model(problem, reps=REPS, warmup=WARMUP)
+        if res.source == "measured":
+            d_stats, t_stats = res.default_stats, res.stats
+            if res.plan == default_plan:
+                t_stats = d_stats   # identical program: one measurement
+        else:
+            # warm cache: the tuner performed zero measurements, so
+            # time both sides here (default first, mirroring the cold
+            # path's measurement order)
+            d_stats = measure_callable(
+                make_serve_runner(cfg, problem, default_plan),
+                reps=REPS, warmup=WARMUP)
+            t_stats = d_stats if res.plan == default_plan \
+                else measure_callable(
+                    make_serve_runner(cfg, problem, res.plan),
+                    reps=REPS, warmup=WARMUP)
+        shared = (f"default_plan={plan_sig(default_plan)};"
+                  f"tuned_plan={plan_sig(res.plan)};"
+                  f"plan_source={res.source};"
+                  f"gen={problem.gen};"
+                  f"default_us_tok={us_per_token(d_stats, problem):.1f};"
+                  f"tuned_us_tok={us_per_token(t_stats, problem):.1f};"
+                  f"default_cov={d_stats.cov:.4f};"
+                  f"tuned_cov={t_stats.cov:.4f};")
+        for tag, plan, stats in (("default", default_plan, d_stats),
+                                 ("tuned", res.plan, t_stats)):
+            rows.append({
+                "name": f"serve/{arch}_decode_{tag}",
+                "us_per_call": us_per_token(stats, problem),
+                "derived": (shared +
+                            f"tpu_wcet_step_us="
+                            f"{_wcet_us(cfg, problem, plan):.3f}"),
+                "jitter": stats.as_dict()})
+    return rows

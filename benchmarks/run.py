@@ -22,10 +22,11 @@ def suite(fast: bool):
     from benchmarks import (bench_beyond_paper, bench_dryrun_summary,
                             bench_fig3_roofline, bench_fig4_matmul,
                             bench_fig5_resources, bench_kernels,
-                            bench_table12_fmax, bench_tpu_roofline)
-    # kernels goes LAST: its tuning measurements leave a large live
+                            bench_serve_steps, bench_table12_fmax,
+                            bench_tpu_roofline)
+    # jax-heavy suites go LAST: their measurements leave a large live
     # jax heap behind, and the pure-Python simulator suites slow down
-    # measurably (GC pressure) when they run after it.
+    # measurably (GC pressure) when they run after them.
     return [
         ("table12", bench_table12_fmax.run),
         ("fig3", bench_fig3_roofline.run),
@@ -36,6 +37,7 @@ def suite(fast: bool):
         ("tpu_roofline", bench_tpu_roofline.run),
         ("dryrun", bench_dryrun_summary.run),
         ("kernels", bench_kernels.run),
+        ("serve_steps", bench_serve_steps.run),
     ]
 
 

@@ -92,10 +92,13 @@ def compare(old: Dict[str, Any], new: Dict[str, Any], *,
                 f"{name}: jitter.cov {ocov:.4f} -> {ncov:.4f} "
                 "(predictability regression)")
 
+    # asymmetric rows never gate — only the intersection is compared —
+    # but each skipped name is surfaced so a silently dropped benchmark
+    # can't masquerade as a clean diff
     for name in sorted(set(old_by) - set(new_by)):
-        notes.append(f"{name}: only in old report")
+        notes.append(f"{name}: skipped, only in old report")
     for name in sorted(set(new_by) - set(old_by)):
-        notes.append(f"{name}: only in new report")
+        notes.append(f"{name}: skipped, only in new report")
     return regressions, improvements, notes
 
 
@@ -136,7 +139,7 @@ def main(argv=None) -> int:
         cov_tol=args.cov_tol, cov_abs=args.cov_abs)
 
     for line in notes:
-        print(f"note: {line}")
+        print(f"warning: {line}")
     for line in improvements:
         print(f"improved: {line}")
     for line in regressions:

@@ -1,9 +1,10 @@
 #!/usr/bin/env python
-"""Offline jitter-aware kernel autotuner CLI (repro.tuning).
+"""Offline jitter-aware autotuner CLI (repro.tuning).
 
-Tunes registered Pallas kernels and persists the winning block plans
-to the JSON plan cache, so later runs — benchmarks, serving, or this
-script again — reuse them with ZERO measurements (the final
+Tunes registered Pallas kernels — or, with ``--model``, a whole
+serving configuration — and persists the winning plans to the JSON
+plan cache, so later runs — benchmarks, serving, or this script
+again — reuse them with ZERO measurements (the final
 ``measurement spans`` line is the proof: it counts the timed reps
 recorded on the obs trace, and a fully warm cache prints 0).
 
@@ -14,9 +15,15 @@ recorded on the obs trace, and a fully warm cache prints 0).
   PYTHONPATH=src python scripts/tune.py --kernel spm_matmul \
       --shape 512x512x512 --dtype bfloat16 --force
 
+  # a serving plan: prefill chunking + decode loop structure,
+  # measured as full prefill+decode passes, cached under ``model|``
+  PYTHONPATH=src python scripts/tune.py --model qwen2-0.5b \
+      --shape 4x64x32
+
 Shape syntax per kernel: spm_matmul MxKxN; flash_attention BxSxHxKVxD
-(causal, Sq=Sk=S); wkv6 BxSxHxK.  Cache path: --cache, else
-$REPRO_PLAN_CACHE, else ~/.cache/repro/tuning_plans.json.
+(causal, Sq=Sk=S); wkv6 BxSxHxK; --model BxPxG (batch x prompt x gen,
+model dims from --layers/--d-model/--vocab).  Cache path: --cache,
+else $REPRO_PLAN_CACHE, else ~/.cache/repro/tuning_plans.json.
 """
 from __future__ import annotations
 
@@ -30,13 +37,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main(argv=None) -> int:
     from repro.kernels import registered_kernels
     ap = argparse.ArgumentParser(
-        description="offline jitter-aware kernel autotuner")
+        description="offline jitter-aware autotuner")
     ap.add_argument("--kernel", action="append",
                     choices=registered_kernels(),
                     help="kernel(s) to tune (default: all registered)")
+    ap.add_argument("--model", default=None, metavar="ARCH",
+                    help="tune a serving plan for this architecture "
+                         "instead of kernel block plans")
     ap.add_argument("--shape", default=None,
-                    help="kernel-specific shape (single --kernel only)")
+                    help="kernel-specific shape (single --kernel "
+                         "only); BxPxG with --model")
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--layers", type=int, default=2,
+                    help="--model: reduced layer count (0 = full)")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--reps", type=int, default=5,
                     help="timed reps per surviving candidate")
     ap.add_argument("--warmup", type=int, default=1)
@@ -50,34 +65,61 @@ def main(argv=None) -> int:
 
     from repro.obs import TraceRecorder
     from repro.tuning import (DEFAULT_PROBLEMS, PlanCache,
-                              measurement_count, parse_problem,
-                              plan_sig, tune)
+                              measurement_count, parse_model_problem,
+                              parse_problem, plan_sig, tune,
+                              tune_model, us_per_token)
 
-    kernels = args.kernel or registered_kernels()
-    if args.shape and len(kernels) != 1:
-        ap.error("--shape needs exactly one --kernel")
-    jobs = []
-    for kern in kernels:
-        problem = (parse_problem(kern, args.shape, args.dtype)
-                   if args.shape else DEFAULT_PROBLEMS[kern])
-        jobs.append((kern, problem))
+    if args.model and args.kernel:
+        ap.error("--model and --kernel are mutually exclusive")
 
     cache = PlanCache(args.cache) if args.cache else None
     trace = TraceRecorder()
-    for kern, problem in jobs:
-        res = tune(kern, problem, cache=cache, reps=args.reps,
-                   warmup=args.warmup,
-                   max_candidates=args.max_candidates,
-                   force=args.force, trace=trace)
-        line = (f"{kern} {problem.sig}: plan={plan_sig(res.plan)} "
+
+    if args.model:
+        problem = parse_model_problem(
+            args.model, args.shape or "4x64x32", layers=args.layers,
+            d_model=args.d_model, vocab=args.vocab, dtype=args.dtype)
+        res = tune_model(problem, cache=cache, reps=args.reps,
+                         warmup=args.warmup,
+                         max_candidates=args.max_candidates,
+                         force=args.force, trace=trace)
+        line = (f"model {problem.sig}: plan={plan_sig(res.plan)} "
                 f"[{res.source}] measured={res.measured}")
         if res.stats is not None:
-            line += (f" p99_us={res.stats.p99:.1f} "
-                     f"cov={res.stats.cov:.4f} "
-                     f"(candidates={res.candidates} "
+            line += (f" (candidates={res.candidates} "
                      f"feasible={res.feasible} "
                      f"pruned_to={res.pruned_to})")
         print(line)
+        if res.stats is not None and res.default_stats is not None:
+            d, t = res.default_stats, res.stats
+            print(f"  tuned:   {us_per_token(t, problem):8.1f} us/tok  "
+                  f"pass p99 {t.p99:.1f} us  cov {t.cov:.4f}")
+            print(f"  default: {us_per_token(d, problem):8.1f} us/tok  "
+                  f"pass p99 {d.p99:.1f} us  cov {d.cov:.4f}")
+    else:
+        kernels = args.kernel or registered_kernels()
+        if args.shape and len(kernels) != 1:
+            ap.error("--shape needs exactly one --kernel")
+        jobs = []
+        for kern in kernels:
+            problem = (parse_problem(kern, args.shape, args.dtype)
+                       if args.shape else DEFAULT_PROBLEMS[kern])
+            jobs.append((kern, problem))
+
+        for kern, problem in jobs:
+            res = tune(kern, problem, cache=cache, reps=args.reps,
+                       warmup=args.warmup,
+                       max_candidates=args.max_candidates,
+                       force=args.force, trace=trace)
+            line = (f"{kern} {problem.sig}: plan={plan_sig(res.plan)} "
+                    f"[{res.source}] measured={res.measured}")
+            if res.stats is not None:
+                line += (f" p99_us={res.stats.p99:.1f} "
+                         f"cov={res.stats.cov:.4f} "
+                         f"(candidates={res.candidates} "
+                         f"feasible={res.feasible} "
+                         f"pruned_to={res.pruned_to})")
+            print(line)
     print(f"plan cache: {(cache or PlanCache()).path}")
     print(f"measurement spans: {measurement_count(trace)}")
     return 0

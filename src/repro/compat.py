@@ -43,6 +43,8 @@ __all__ = [
     "on_tpu",
     "resolve_interpret",
     "shard_map",
+    "donated_jit",
+    "aot_compile",
 ]
 
 
@@ -168,6 +170,40 @@ def normalize_cost_analysis(raw) -> Dict[str, float]:
 def cost_analysis(compiled) -> Dict[str, float]:
     """Normalized cost analysis of a compiled executable."""
     return normalize_cost_analysis(compiled.cost_analysis())
+
+
+# ------------------------------------------------- donation / AOT jit
+
+def donated_jit(fn, *, donate_argnums: Tuple[int, ...] = (),
+                static_argnums: Tuple[int, ...] = ()):
+    """``jax.jit`` with buffer donation, degrading gracefully where the
+    backend cannot honour it.
+
+    Donation is the serving steady state's realloc killer (the KV cache
+    is updated in place instead of copied every decode step), but CPU —
+    the validation backend — implements it only partially and warns on
+    every compile.  Requesting donation only where it works keeps the
+    timed region identical across backends without drowning CPU runs in
+    warnings; the *semantics* (caller must not reuse donated args) are
+    the same either way, so code tested on CPU is donation-correct on
+    TPU.
+    """
+    if jax.default_backend() not in ("tpu", "gpu"):
+        donate_argnums = ()
+    return jax.jit(fn, donate_argnums=donate_argnums,
+                   static_argnums=static_argnums)
+
+
+def aot_compile(jitted, *args, **kwargs):
+    """Ahead-of-time compile a jitted callable for example arguments.
+
+    ``jit(...).lower(...).compile()`` is the stable AOT spelling across
+    the supported span (jax.stages); wrapping it here keeps launch code
+    off the raw surface and gives one place to absorb future drift.
+    The returned executable runs with ZERO compile-time jitter — the
+    serving loop compiles before its timed region starts.
+    """
+    return jitted.lower(*args, **kwargs).compile()
 
 
 # ---------------------------------------------------- interpret select

@@ -276,3 +276,32 @@ def supported_shapes(cfg: ModelConfig) -> Tuple[str, ...]:
     if subquadratic:
         shapes.append("long_500k")
     return tuple(shapes)
+
+
+def reduce_config(cfg: ModelConfig, *, layers: int, d_model: int,
+                  vocab: int) -> ModelConfig:
+    """CPU-friendly shrink of a registered architecture: same family
+    and layer pattern, small dims.  One implementation shared by the
+    launchers (launch/train.py --layers/--d-model/--vocab) and the
+    serving autotuner (tuning.model), so a plan tuned for a reduced
+    arch is tuned for exactly what the launcher serves."""
+    kw = dict(num_layers=layers, d_model=d_model, d_ff=d_model * 3,
+              vocab_size=vocab, vocab_pad_multiple=64)
+    if cfg.attention:
+        kw["attention"] = dataclasses.replace(
+            cfg.attention, num_heads=4, num_kv_heads=2, head_dim=32)
+    if cfg.moe:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
+            expert_ff=64, group_size=32,
+            shared_expert_ff=64 if cfg.moe.shared_expert_ff else 0)
+    if cfg.ssm:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, chunk_size=32)
+        kw["attention"] = dataclasses.replace(
+            cfg.attention, num_heads=4, num_kv_heads=4, head_dim=64)
+    if cfg.rwkv:
+        kw["rwkv"] = dataclasses.replace(cfg.rwkv, head_dim=32,
+                                         chunk_size=32)
+    if cfg.encdec:
+        kw["encdec"] = dataclasses.replace(cfg.encdec, encoder_layers=2)
+    return dataclasses.replace(cfg, **kw)

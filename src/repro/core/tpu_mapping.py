@@ -89,6 +89,28 @@ def tpu_matmul_schedule(m: int, k: int, n: int, *, n_devices: int = 1,
     return sched
 
 
+def serve_step_schedule(batch: int, d_model: int, n_params: int, *,
+                        plan: dict, elem_bytes: int = 2,
+                        chip: TPUChip = V5E) -> Schedule:
+    """Static schedule for one decode step's weight pass, tiled by the
+    SERVED plan.
+
+    The serving runtime resolves a model plan (tuning.model) whose
+    ``mm_bm``/``mm_bn`` pins are the decode matmul tiles; building the
+    WCET schedule from those same pins is what makes the printed bound
+    (and the deadline derived from it) track the plan actually served
+    instead of a hand-picked constant.  Each generated token multiplies
+    the [batch, d_model] activations against every weight matrix once:
+    an effective [batch, d_model, 2*n_params/d_model] matmul.
+    """
+    n_eff = max(d_model, 2 * n_params // d_model)
+    tile_m = max(1, min(int(plan["mm_bm"]), batch))
+    tile_n = max(1, min(int(plan["mm_bn"]), n_eff))
+    return tpu_matmul_schedule(batch, d_model, n_eff, tile_m=tile_m,
+                               tile_n=tile_n, elem_bytes=elem_bytes,
+                               chip=chip)
+
+
 def tpu_phase_wcet(ph, chip: TPUChip = V5E) -> float:
     """Worst-case seconds for one TPU phase."""
     if ph.kind == "compute":

@@ -6,6 +6,18 @@ WCET bound per step (from core.tpu_mapping) next to the measured step
 times and reports the observed jitter — the datacenter analogue of the
 paper's Fig. 4 variability measurement.
 
+The step program itself comes from a resolved **serving plan**
+(tuning.model): prefill chunk sizes, scan-vs-unroll for the decode
+layer loop, and the decode weight-pass tile pins.  Resolution follows
+the kernel-wrapper precedence — explicit ``--chunk-q``/``--chunk-kv``
+flags > the tuned plan cached by ``scripts/tune.py --model`` > shape-
+safe defaults — and the WCET bound/deadline are built from the SAME
+plan via ``serve_step_schedule``, so the printed bound tracks the plan
+actually served.  Prefill and the decode step are AOT-compiled
+(``compat.aot_compile``) with a donated KV cache before the timed
+region, so every timed step — including the first — runs the compiled
+program.
+
 The WCET bound also becomes a *deadline*: every decode step is checked
 against ``wcet * --deadline-slack`` (or an explicit ``--deadline-ms``)
 and overruns walk the resilience ladder — record, then warn, then shed
@@ -32,11 +44,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs import get_config
 from repro.launch.train import reduced_config
 from repro.models import lm as lm_mod
 from repro.models.lm import RunOptions
 from repro.resilience.deadline import DeadlineMonitor
+from repro.tuning.model import ModelProblem, resolve_model_plan
+from repro.tuning.plan import plan_sig
 
 
 def shed_batch(cfg, cache, tok, n_new: int, cache_len: int,
@@ -60,6 +75,36 @@ def shed_batch(cfg, cache, tok, n_new: int, cache_len: int,
     return jax.tree.map(shed, spec, cache), tok[:n_new]
 
 
+def plan_wcet_s(cfg, plan: dict, batch: int, n_params: int) -> float:
+    """The per-step WCET bound for the decode weight pass under the
+    served plan's tile pins — the single source for both the printed
+    bound and the derived deadline (tested: changing the plan's pins
+    must change this number)."""
+    from repro.core.tpu_mapping import serve_step_schedule, tpu_wcet
+    sched = serve_step_schedule(batch, cfg.d_model, n_params, plan=plan)
+    return tpu_wcet(sched)
+
+
+def compile_step_fns(cfg, params, batch, opts: RunOptions,
+                     prompt_len: int):
+    """AOT-compile prefill and the donated-cache decode step for the
+    shapes in ``batch``; returns ``(prefill_c, step_c)`` ready to call.
+
+    ``aot_compile`` populates nothing implicit — the returned compiled
+    objects themselves must be called — which is exactly what keeps
+    compilation out of the timed region (and off the jitter stats)."""
+    prefill_j = jax.jit(lambda p, b: lm_mod.prefill(cfg, p, b, opts))
+    step_j = compat.donated_jit(
+        lambda p, c, t, i: lm_mod.decode_step(cfg, p, c, t, i, opts),
+        donate_argnums=(1,))
+    prefill_c = compat.aot_compile(prefill_j, params, batch)
+    logits0, cache0 = prefill_c(params, batch)
+    tok0 = jnp.argmax(logits0[:, :cfg.vocab_size], axis=-1)
+    step_c = compat.aot_compile(step_j, params, cache0, tok0,
+                                jnp.int32(prompt_len))
+    return prefill_c, step_c
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -70,6 +115,12 @@ def main():
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--chunk-q", type=int, default=None,
+                    help="explicit prefill q-chunk (overrides the "
+                         "tuned serving plan)")
+    ap.add_argument("--chunk-kv", type=int, default=None,
+                    help="explicit prefill kv-chunk (overrides the "
+                         "tuned serving plan)")
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="explicit per-step deadline; 0 = derive from "
                          "the WCET bound")
@@ -84,8 +135,19 @@ def main():
         cfg = reduced_config(cfg, args)
     B, P, G = args.batch, args.prompt_len, args.gen
     total = P + G
-    opts = RunOptions(chunk_q=32, chunk_kv=32, cache_len=total,
-                      remat=False)
+
+    # serving plan: explicit flags > tuned cache entry > defaults
+    problem = ModelProblem(
+        args.arch, B, P, G,
+        layers=0 if args.full else args.layers,
+        d_model=args.d_model, vocab=args.vocab)
+    resolved = resolve_model_plan(cfg, problem, {
+        "chunk_q": args.chunk_q, "chunk_kv": args.chunk_kv})
+    plan, plan_source = resolved["plan"], resolved["source"]
+    opts = RunOptions(chunk_q=int(plan["chunk_q"]),
+                      chunk_kv=int(plan["chunk_kv"]),
+                      cache_len=total, remat=False,
+                      decode_scan=bool(plan["decode_scan"]))
 
     key = jax.random.PRNGKey(0)
     params = lm_mod.init_params(cfg, key)
@@ -94,30 +156,26 @@ def main():
     if cfg.family == "encdec":
         batch["frames"] = jax.random.normal(key, (B, P, cfg.d_model))
 
-    prefill = jax.jit(lambda p, b: lm_mod.prefill(cfg, p, b, opts))
-    step = jax.jit(lambda p, c, t, i: lm_mod.decode_step(
-        cfg, p, c, t, i, opts), donate_argnums=(1,))
-
     trace_path = os.environ.get("REPRO_TRACE")
     rec = None
     if trace_path:
         from repro.obs import TraceRecorder
         rec = TraceRecorder(time_unit="us")
 
-    # static-schedule WCET bound for the decode matmuls on the target,
-    # computed up front so it can serve as the step deadline
-    from repro.core.tpu_mapping import tpu_matmul_schedule, tpu_wcet
-    n_p = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
-    sched = tpu_matmul_schedule(B, cfg.d_model, 2 * n_p // cfg.d_model,
-                                tile_m=min(128, B) if B >= 8 else 8,
-                                tile_n=512)
-    wcet_s = tpu_wcet(sched)
+    # static-schedule WCET bound for the decode weight pass, built from
+    # the SAME plan the steps will execute, computed up front so it can
+    # serve as the step deadline
+    n_p = lm_mod.param_count(cfg)
+    wcet_s = plan_wcet_s(cfg, plan, B, n_p)
     deadline_s = (args.deadline_ms / 1e3 if args.deadline_ms > 0
                   else wcet_s * args.deadline_slack)
     dmon = DeadlineMonitor(deadline_s=deadline_s, trace=rec)
 
+    # all compilation happens here, before anything is timed
+    prefill_c, step_c = compile_step_fns(cfg, params, batch, opts, P)
+
     t0 = time.monotonic()
-    logits, cache = jax.block_until_ready(prefill(params, batch))
+    logits, cache = jax.block_until_ready(prefill_c(params, batch))
     t_prefill = time.monotonic() - t0
     if rec is not None:
         rec.add_span("prefill", "serve", t0 * 1e6,
@@ -129,7 +187,7 @@ def main():
     tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
     for i in range(G):
         t1 = time.monotonic()
-        logits, cache = step(params, cache, tok, P + i)
+        logits, cache = step_c(params, cache, tok, jnp.int32(P + i))
         logits = jax.block_until_ready(logits)
         t2 = time.monotonic()
         times.append(t2 - t1)
@@ -139,22 +197,26 @@ def main():
             rec.counter("step_ms", (t2 - t1) * 1e3, track="serve")
         tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
         out.append(np.asarray(tok))
-        # deadline ladder (skip step 0: compile, already excluded from
-        # the jitter stats below for the same reason)
-        if i >= 1:
-            action = dmon.observe(i, t2 - t1)
-            if action == "warn":
-                print(f"deadline overrun at decode step {i}: "
-                      f"{(t2 - t1) * 1e3:.2f} ms > "
-                      f"{deadline_s * 1e3:.2f} ms")
-            elif action == "shed" and tok.shape[0] > 1:
-                n_new = tok.shape[0] // 2
-                print(f"deadline ladder: shedding batch "
-                      f"{tok.shape[0]} -> {n_new} at decode step {i}")
-                cache, tok = shed_batch(cfg, cache, tok, n_new, total,
-                                        opts.windowed_cache)
+        action = dmon.observe(i, t2 - t1)
+        if action == "warn":
+            print(f"deadline overrun at decode step {i}: "
+                  f"{(t2 - t1) * 1e3:.2f} ms > "
+                  f"{deadline_s * 1e3:.2f} ms")
+        elif action == "shed" and tok.shape[0] > 1:
+            n_new = tok.shape[0] // 2
+            print(f"deadline ladder: shedding batch "
+                  f"{tok.shape[0]} -> {n_new} at decode step {i}")
+            cache, tok = shed_batch(cfg, cache, tok, n_new, total,
+                                    opts.windowed_cache)
+            # new batch shape = new program: re-AOT-compile outside the
+            # per-step timing so the shed path stays compile-free too
+            shed_batch_dict = {k: v[:n_new] for k, v in batch.items()}
+            _, step_c = compile_step_fns(cfg, params, shed_batch_dict,
+                                         opts, P)
 
-    times = np.array(times[1:])   # drop first (compile)
+    # AOT warm-up means step 0 is a real step: every sample counts
+    times = np.array(times)
+    print(f"serving plan [{plan_source}]: {plan_sig(plan)}")
     print(f"prefill: {t_prefill*1e3:.1f} ms for {B}x{P} tokens")
     print(f"decode:  median {np.median(times)*1e3:.2f} ms/step  "
           f"std {times.std()*1e3:.3f} ms  "
@@ -166,7 +228,8 @@ def main():
         print(f"generated: {len(out)} steps, batch shed to "
               f"{out[-1].shape[0]} (started at {B})")
 
-    print(f"TPU-target WCET bound per step (weight pass): "
+    print(f"TPU-target WCET bound per step (weight pass, "
+          f"plan tiles {plan['mm_bm']}x{plan['mm_bn']}): "
           f"{wcet_s*1e3:.3f} ms")
     s = dmon.summary()
     print(f"deadline: {s['deadline_s']*1e3:.3f} ms/step  "

@@ -13,37 +13,19 @@ knob the kernel-conformance harness honors).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 
-from repro.configs import TrainConfig, get_config
+from repro.configs import TrainConfig, get_config, reduce_config
 from repro.data.pipeline import DataConfig
 from repro.models.lm import RunOptions
 from repro.runtime.trainer import Trainer
 
 
 def reduced_config(cfg, args):
-    kw = dict(num_layers=args.layers, d_model=args.d_model,
-              d_ff=args.d_model * 3, vocab_size=args.vocab,
-              vocab_pad_multiple=64)
-    if cfg.attention:
-        kw["attention"] = dataclasses.replace(
-            cfg.attention, num_heads=4, num_kv_heads=2, head_dim=32)
-    if cfg.moe:
-        kw["moe"] = dataclasses.replace(
-            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
-            expert_ff=64, group_size=32,
-            shared_expert_ff=64 if cfg.moe.shared_expert_ff else 0)
-    if cfg.ssm:
-        kw["ssm"] = dataclasses.replace(cfg.ssm, chunk_size=32)
-        kw["attention"] = dataclasses.replace(
-            cfg.attention, num_heads=4, num_kv_heads=4, head_dim=64)
-    if cfg.rwkv:
-        kw["rwkv"] = dataclasses.replace(cfg.rwkv, head_dim=32,
-                                         chunk_size=32)
-    if cfg.encdec:
-        kw["encdec"] = dataclasses.replace(cfg.encdec, encoder_layers=2)
-    return dataclasses.replace(cfg, **kw)
+    """CLI shim over configs.reduce_config (the shared shrink the
+    serving autotuner keys its plans on)."""
+    return reduce_config(cfg, layers=args.layers, d_model=args.d_model,
+                         vocab=args.vocab)
 
 
 def main():
@@ -60,6 +42,13 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--full", action="store_true",
                     help="use the published architecture size")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="explicit per-step deadline; 0 = derive from "
+                         "the WCET bound")
+    ap.add_argument("--deadline-slack", type=float, default=50.0,
+                    help="deadline = WCET bound x slack (the bound "
+                         "targets the TPU mapping; on other backends "
+                         "the slack absorbs the platform gap)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -79,11 +68,37 @@ def main():
         from repro.obs import TraceRecorder
         rec = TraceRecorder(time_unit="us")
 
+    # WCET-derived step deadline, same recipe as serving: the weight
+    # pass over B*S tokens, tiled by the resolved kernel plan; the
+    # forward+backward pass streams each weight ~3x (fwd, grad-wrt-
+    # input, grad-wrt-weight), hence the 3x on the one-pass bound.
+    from repro.core.tpu_mapping import serve_step_schedule, tpu_wcet
+    from repro.models.lm import param_count
+    from repro.tuning.model import ModelProblem, kernel_pins
+    prob = ModelProblem(args.arch, args.batch * args.seq, args.seq,
+                        1, layers=0 if args.full else args.layers,
+                        d_model=args.d_model, vocab=args.vocab)
+    sched = serve_step_schedule(args.batch * args.seq, cfg.d_model,
+                                param_count(cfg),
+                                plan=kernel_pins(cfg, prob))
+    wcet_s = 3.0 * tpu_wcet(sched)
+    deadline_s = (args.deadline_ms / 1e3 if args.deadline_ms > 0
+                  else wcet_s * args.deadline_slack)
+    from repro.resilience.deadline import DeadlineMonitor
+    dmon = DeadlineMonitor(deadline_s=deadline_s, trace=rec)
+
     tr = Trainer(cfg, tcfg, dcfg, ckpt_dir=args.ckpt_dir, opts=opts,
-                 trace=rec)
+                 trace=rec, deadline=dmon)
     hist = tr.run(args.steps)
     print(f"first loss {hist['loss'][0]:.4f} -> last "
           f"{hist['loss'][-1]:.4f} in {hist['wall_s'][0]:.1f}s")
+    print(f"TPU-target WCET bound per step (fwd+bwd weight passes): "
+          f"{wcet_s*1e3:.3f} ms")
+    s = dmon.summary()
+    print(f"deadline: {s['deadline_s']*1e3:.3f} ms/step  "
+          f"overruns {s['overruns']}  ladder record/warn/shed "
+          f"{s['n_record']}/{s['n_warn']}/{s['n_shed']}  "
+          f"worst overrun {s['worst_overrun_s']*1e3:.3f} ms")
 
     if rec is not None and rec.spans:
         from repro.obs import write_chrome_trace

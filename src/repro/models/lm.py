@@ -43,6 +43,12 @@ class RunOptions:
     moe_impl: str = "einsum"  # einsum (GShard baseline) | gather (§Perf)
     windowed_cache: bool = False  # ring-buffer KV for sliding-window
     #                               layers (wincache variant, §Perf)
+    # decode-loop structure: scan (one compiled unit body, small
+    # program) vs unroll (per-unit programs fused end-to-end).  None =
+    # follow cfg.scan_layers; the serving autotuner measures both and
+    # pins the winner in the model plan ("decode_scan" 0/1).  Either
+    # choice is numerically identical (tests/test_model_plan.py).
+    decode_scan: Optional[bool] = None
     # activation sharding constraints (NamedShardings keyed by role);
     # None = single-device / let GSPMD infer.  Keys: "x" (residual
     # stream [B,S,d]), "logits" ([B,C,V]), "kv" (cache [B,S,KV,hd]).
@@ -101,6 +107,17 @@ def model_spec(cfg: ModelConfig) -> dict:
 
 def init_params(cfg: ModelConfig, key) -> dict:
     return init_tree(model_spec(cfg), key)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total parameter count straight from the spec (no allocation) —
+    what the serving WCET model sizes the per-step weight pass with."""
+    import numpy as np
+
+    from repro.models.spec import is_par
+    return int(sum(int(np.prod(p.shape))
+                   for p in jax.tree.leaves(model_spec(cfg),
+                                            is_leaf=is_par)))
 
 
 def cache_spec(cfg: ModelConfig, batch: int, cache_len: int,
@@ -494,6 +511,8 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
             params["dec_pos"], jnp.asarray(pos, jnp.int32), 1, axis=0)
     x0 = x
     shared = params.get("shared")
+    scan_units = (cfg.scan_layers if opts.decode_scan is None
+                  else bool(opts.decode_scan))
     new_caches = {}
     for si, st in enumerate(blk.build_stages(cfg)):
         sp = params[f"stage{si}"]
@@ -505,7 +524,7 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
                                         opts, cu, shared, ui)
             return xx, nc
 
-        if cfg.scan_layers:
+        if scan_units:
             x, nc = jax.lax.scan(body, x, (sp, idxs, cache[f"stage{si}"]))
         else:
             ncl = []

@@ -56,6 +56,9 @@ class Trainer:
     trace: Optional[Any] = None     # obs.TraceRecorder (wall-clock us)
     chaos: Optional[FaultPlan] = None   # resilience: fault injection
     max_nonfinite: int = 3          # consecutive bad steps -> abort
+    deadline: Optional[Any] = None  # resilience.DeadlineMonitor: each
+    # training step walks the same record->warn ladder as serving
+    # (train never sheds; the overrun summary is the deliverable)
 
     def __post_init__(self):
         self.dataset = SyntheticLMDataset(self.dcfg)
@@ -126,6 +129,7 @@ class Trainer:
                      if self.chaos is not None else 1.0)
             batch = self.dataset.batch_at(state.step)
             self.straggler.step_start()
+            t_step = time.monotonic()
             if self.trace is not None:
                 self.trace.begin(f"step{state.step}", track="trainer",
                                  cat="train_step", step=state.step)
@@ -155,8 +159,20 @@ class Trainer:
                         f"non-finite losses at step {state.step}")
                 continue
             consecutive_nonfinite = 0
+            dt_step = time.monotonic() - t_step
             state = TrainerState(params, opt, state.step + 1)
             slow = self.straggler.step_end(state.step)
+            # deadline ladder (skip the first step: it pays compile).
+            # training has no batch to shed, so "shed" only escalates
+            # the message — the summary is the structured deliverable
+            if self.deadline is not None and state.step > 1:
+                action = self.deadline.observe(state.step, dt_step)
+                if action in ("warn", "shed"):
+                    print(f"deadline overrun at step {state.step}: "
+                          f"{dt_step * 1e3:.2f} ms > "
+                          f"{self.deadline.deadline_s * 1e3:.2f} ms"
+                          + (" [persistent]" if action == "shed"
+                             else ""))
             history["loss"].append(loss)
             history["step_s"].append(
                 self.straggler.mean_step_s or 0.0)

@@ -24,8 +24,14 @@ Layers:
 - ``runtime``     — ``resolve_plan()``: what the kernel wrappers call
   (explicit args > cached plan > defaults; $REPRO_AUTOTUNE=0 disables
   the cache consult).
+- ``model``/``model_tuner`` — the same pipeline one level up: serving
+  plans (prefill chunking, decode scan-vs-unroll, decode weight-pass
+  tile pins) measured as full prefill+decode passes and cached under
+  the ``model|`` key namespace; ``resolve_model_plan()`` is what the
+  serving launcher calls.
 
-CLI: ``scripts/tune.py``.  Regression gate: ``scripts/bench_diff.py``.
+CLI: ``scripts/tune.py`` (``--model`` for serving plans).
+Regression gate: ``scripts/bench_diff.py``.
 """
 from repro.tuning.autotuner import TuneResult, make_runner, shortlist, tune
 from repro.tuning.candidates import (TUNE_SPECS, defaults_for,
@@ -37,6 +43,15 @@ from repro.tuning.measure import (MEASURE_TRACK, measure_callable,
 from repro.tuning.plan import (DEFAULT_PROBLEMS, AttentionProblem,
                                MatmulProblem, Plan, Problem, WkvProblem,
                                parse_problem, plan_sig)
+from repro.tuning.model import (MODEL_NS, ModelProblem,
+                                default_model_plan,
+                                enumerate_model_candidates,
+                                model_analytic_cost_s, model_cache_key,
+                                model_feasible, parse_model_problem,
+                                problem_config, resolve_model_plan)
+from repro.tuning.model_tuner import (ModelTuneResult, make_serve_runner,
+                                      model_shortlist, tune_model,
+                                      us_per_token)
 from repro.tuning.plan_cache import (PlanCache, cache_key,
                                      env_fingerprint, env_sig)
 from repro.tuning.runtime import (active_cache, autotune_enabled, reset,

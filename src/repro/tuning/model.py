@@ -1,0 +1,244 @@
+"""Model-level serving plans: the autotuner one level up the stack.
+
+PR 8 tuned *kernel* block plans; the serving path still ran hand-picked
+``RunOptions`` chunk sizes and derived its WCET banner from default
+tile constants.  This module closes that gap with the same offline
+discipline applied end-to-end:
+
+- a ``ModelProblem`` is the static description of one serving
+  configuration — architecture, batch, prompt/generation lengths, the
+  reduced dims the launcher actually builds, dtype — everything that
+  changes the optimal plan and nothing that doesn't;
+- a model *plan* is a flat ``{name: int}`` dict (same shape as kernel
+  plans, so the persistent cache validates it unchanged):
+
+  ``chunk_q`` / ``chunk_kv``   prefill attention chunking (RunOptions),
+  ``decode_scan``              0/1: unroll vs scan the decode layer loop,
+  ``mm_bm`` / ``mm_bn``        the decode weight-pass matmul tile pins —
+                               resolved through the KERNEL plan cache
+                               (spm_matmul namespace), recorded in the
+                               model plan, and fed to
+                               ``core.tpu_mapping.serve_step_schedule``
+                               so the WCET bound tracks the served plan.
+
+Candidates are enumerated small, pruned by the same VMEM-feasibility
+and roofline machinery the kernel tuner uses (the prefill attention
+working set is priced as a flash_attention problem; the decode step as
+a weight-pass roofline), and the survivors are measured end-to-end by
+``tuning.model_tuner``.  Winners persist in the shared
+``$REPRO_PLAN_CACHE`` under the ``model|`` key namespace.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.analysis.roofline import kernel_bound_s
+from repro.core.tpu_mapping import V5E, TPUChip
+from repro.tuning.candidates import _tile_candidates
+from repro.tuning.cost_model import analytic_cost_s as _kernel_cost_s
+from repro.tuning.cost_model import feasibility as _kernel_feasibility
+from repro.tuning.plan import AttentionProblem, MatmulProblem, Plan
+from repro.tuning.plan_cache import cache_key
+
+# Cache namespace: model plans share the kernel cache file but never a
+# key (``model|<problem.sig>|<env>``).
+MODEL_NS = "model"
+
+_CHUNK_TILES = (16, 32, 64, 128, 256, 512)
+
+
+@dataclass(frozen=True)
+class ModelProblem:
+    """One serving configuration, as the launcher builds it.
+
+    ``layers``/``d_model``/``vocab`` are the reduced dims
+    (configs.reduce_config); 0 means --full (the registered size).
+    """
+    arch: str
+    batch: int
+    prompt_len: int
+    gen: int
+    layers: int = 2
+    d_model: int = 128
+    vocab: int = 512
+    dtype: str = "float32"
+
+    @property
+    def sig(self) -> str:
+        dims = ("full" if not self.layers
+                else f"l{self.layers}d{self.d_model}v{self.vocab}")
+        return (f"{self.arch}-b{self.batch}p{self.prompt_len}"
+                f"g{self.gen}-{dims}-{self.dtype}")
+
+
+def model_cache_key(problem: ModelProblem) -> str:
+    return cache_key(MODEL_NS, problem)
+
+
+def problem_config(problem: ModelProblem):
+    """The ModelConfig this problem describes (reduced unless full)."""
+    from repro.configs import get_config, reduce_config
+    cfg = get_config(problem.arch)
+    if problem.layers:
+        cfg = reduce_config(cfg, layers=problem.layers,
+                            d_model=problem.d_model,
+                            vocab=problem.vocab)
+    return cfg
+
+
+def parse_model_problem(arch: str, text: str, *, layers: int = 2,
+                        d_model: int = 128, vocab: int = 512,
+                        dtype: str = "float32") -> ModelProblem:
+    """CLI shape syntax ``BxPxG`` (batch x prompt_len x gen)."""
+    dims = [int(p) for p in text.replace(",", "x").split("x") if p]
+    if len(dims) != 3:
+        raise ValueError(f"model shape wants BxPxG, got {text!r}")
+    b, p, g = dims
+    return ModelProblem(arch, b, p, g, layers=layers, d_model=d_model,
+                        vocab=vocab, dtype=dtype)
+
+
+# ------------------------------------------------------- kernel pins
+
+def decode_matmul_problem(cfg, problem: ModelProblem) -> MatmulProblem:
+    """The decode step's aggregate weight pass as a matmul problem:
+    [B, d_model] activations against every weight matrix once."""
+    from repro.models.lm import param_count
+    n_params = param_count(cfg)
+    n_eff = max(cfg.d_model, 2 * n_params // cfg.d_model)
+    return MatmulProblem(problem.batch, cfg.d_model, n_eff,
+                         dtype=problem.dtype)
+
+
+def kernel_pins(cfg, problem: ModelProblem) -> Dict[str, int]:
+    """Resolve the decode weight-pass tile plan through the KERNEL
+    namespace of the plan cache (tuned spm_matmul plan if present,
+    shape-safe defaults otherwise) and flatten it into the model-plan
+    pin fields.  These pins parameterize the WCET schedule
+    (core.tpu_mapping.serve_step_schedule) — recording them in the
+    model plan is what lets a test prove the serve banner derives from
+    the plan actually served."""
+    from repro.tuning.runtime import resolve_plan
+    mm = decode_matmul_problem(cfg, problem)
+    plan = resolve_plan("spm_matmul", mm,
+                        {"bm": None, "bn": None, "bk": None})
+    return {"mm_bm": min(int(plan["bm"]), mm.m),
+            "mm_bn": min(int(plan["bn"]), mm.n)}
+
+
+# ------------------------------------------------ defaults/candidates
+
+def default_model_plan(cfg, problem: ModelProblem) -> Plan:
+    """The plan the serving path ran before tuning existed: 32-token
+    prefill chunks, decode loop structure from cfg.scan_layers, tiles
+    from the kernel-plan resolution."""
+    plan = {"chunk_q": 32 if problem.prompt_len % 32 == 0
+            else problem.prompt_len,
+            "chunk_kv": 32 if problem.prompt_len % 32 == 0
+            else problem.prompt_len,
+            "decode_scan": int(bool(cfg.scan_layers))}
+    plan.update(kernel_pins(cfg, problem))
+    return plan
+
+
+def enumerate_model_candidates(cfg, problem: ModelProblem) -> List[Plan]:
+    """Small grid over the knobs that change the executed program;
+    every candidate carries the same kernel pins."""
+    pins = kernel_pins(cfg, problem)
+    chunks = _tile_candidates(problem.prompt_len, _CHUNK_TILES)
+    scans = [int(bool(cfg.scan_layers))]
+    if cfg.num_layers and cfg.num_layers <= 8:
+        # unrolling hundreds of layers would explode compile time; the
+        # scan-vs-unroll trade is only worth measuring on short stacks
+        scans = sorted({0, 1} | set(scans))
+    cands = [{"chunk_q": cq, "chunk_kv": ckv, "decode_scan": sc, **pins}
+             for cq in chunks for ckv in chunks for sc in scans]
+    default = default_model_plan(cfg, problem)
+    if default not in cands:
+        cands.append(default)
+    return cands
+
+
+# ------------------------------------------------------ analytic prune
+
+def _prefill_attn_problem(cfg, problem: ModelProblem) \
+        -> Optional[AttentionProblem]:
+    a = cfg.attention
+    if a is None:
+        return None
+    return AttentionProblem(problem.batch, problem.prompt_len,
+                            problem.prompt_len, a.num_heads,
+                            a.num_kv_heads, a.head_dim,
+                            dtype=problem.dtype)
+
+
+def model_feasible(cfg, problem: ModelProblem, plan: Plan,
+                   chip: TPUChip = V5E) -> bool:
+    """VMEM feasibility of the prefill attention working set under the
+    plan's chunking — the same scratchpad-capacity rule the kernel
+    tuner applies, evaluated on the chunk the model plan pins."""
+    ap = _prefill_attn_problem(cfg, problem)
+    if ap is None:
+        return True
+    attn_plan = {"bq": min(plan["chunk_q"] or ap.seq_q, ap.seq_q),
+                 "bk": min(plan["chunk_kv"] or ap.seq_k, ap.seq_k)}
+    return _kernel_feasibility("flash_attention", ap, attn_plan,
+                               chip).fits
+
+
+def model_analytic_cost_s(cfg, problem: ModelProblem, plan: Plan,
+                          chip: TPUChip = V5E) -> float:
+    """Modeled worst-case seconds for one full serve pass (prefill +
+    ``gen`` decode steps) — the pruning objective, never the verdict.
+
+    Prefill attention is priced per layer with the kernel cost model
+    under the plan's chunking; every decode step pays the weight-pass
+    roofline (all parameters stream once per token).
+    """
+    cost = 0.0
+    ap = _prefill_attn_problem(cfg, problem)
+    if ap is not None:
+        attn_plan = {"bq": min(plan["chunk_q"] or ap.seq_q, ap.seq_q),
+                     "bk": min(plan["chunk_kv"] or ap.seq_k, ap.seq_k)}
+        cost += cfg.num_layers * _kernel_cost_s(
+            "flash_attention", ap, attn_plan, chip)
+    mm = decode_matmul_problem(cfg, problem)
+    elem = 2 if "16" in problem.dtype else 4
+    step = kernel_bound_s(2.0 * mm.m * mm.k * mm.n,
+                          float(mm.k) * mm.n * elem,
+                          mxu_eff=chip.worst_mxu_eff,
+                          hbm_derate=chip.worst_hbm_derate)
+    return cost + problem.gen * step
+
+
+# --------------------------------------------------------- resolution
+
+def resolve_model_plan(cfg, problem: ModelProblem,
+                       overrides: Optional[Dict[str, Optional[int]]]
+                       = None) -> Dict[str, object]:
+    """Serving-time plan resolution, same precedence as the kernel
+    wrappers: explicit (non-None) overrides > cached tuned plan >
+    defaults.  Returns ``{"plan": Plan, "source": str}`` so the serve
+    banner can say where its plan came from.
+
+    The cache consult goes through the shared process cache and is
+    keyed on the environment fingerprint (backend included): a plan
+    tuned on CPU never resolves on a TPU fingerprint.
+    """
+    from repro.tuning.runtime import active_cache, autotune_enabled
+    plan = default_model_plan(cfg, problem)
+    overrides = overrides or {}
+    explicit = {k: int(v) for k, v in overrides.items()
+                if v is not None and k in plan}
+    source = "defaults"
+    if len(explicit) < len(plan) and autotune_enabled():
+        cached = active_cache().get(model_cache_key(problem))
+        if cached is not None:
+            plan.update({k: v for k, v in cached.items() if k in plan})
+            source = "cache"
+    if explicit:
+        plan.update(explicit)
+        source = "explicit" if len(explicit) == len(plan) \
+            else f"explicit+{source}"
+    return {"plan": plan, "source": source}

@@ -9,7 +9,13 @@ Keying: ``kernel|problem.sig|env`` where ``env`` is a digest of the
 environment fields of ``repro.obs.report.hw_fingerprint()`` plus the
 JAX backend.  A plan tuned on one machine/backend/JAX version is never
 silently reused on another (the problem ``sig`` already carries shape
-and dtype).
+and dtype).  Model-level serving plans (tuning.model) live in the same
+store under the ``model|...`` namespace.
+
+Schema v2 (the ``model|`` namespace PR) only widened the key space;
+entry shape is unchanged, so v1 files written by older tuners load
+without warnings (``_ACCEPTED_SCHEMA_VERSIONS``) — a cache is never
+invalidated by upgrading the tuner.
 
 The cache degrades, never fails: an unreadable or mis-shaped file (or
 entry) warns once and behaves as empty, so a corrupt cache can only
@@ -32,7 +38,9 @@ import time
 import warnings
 from typing import Any, Dict, Optional
 
-CACHE_SCHEMA_VERSION = 1
+CACHE_SCHEMA_VERSION = 2
+# older schemas this reader still accepts (entry shape is identical)
+_ACCEPTED_SCHEMA_VERSIONS = (1, CACHE_SCHEMA_VERSION)
 CACHE_PATH_ENV = "REPRO_PLAN_CACHE"
 DEFAULT_CACHE_PATH = "~/.cache/repro/tuning_plans.json"
 
@@ -100,7 +108,8 @@ class PlanCache:
             try:
                 doc = json.loads(self._read_text())
                 if (not isinstance(doc, dict)
-                        or doc.get("schema_version") != CACHE_SCHEMA_VERSION
+                        or doc.get("schema_version")
+                        not in _ACCEPTED_SCHEMA_VERSIONS
                         or not isinstance(doc.get("plans"), dict)):
                     raise ValueError("unrecognized plan-cache schema")
                 self._plans = dict(doc["plans"])

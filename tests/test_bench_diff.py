@@ -93,8 +93,8 @@ def test_asymmetric_rows_are_notes_not_failures(tmp_path, capsys):
     new = _report(tmp_path / "new.json", [_row("only/new", 10.0)])
     assert bd.main([str(old), str(new)]) == bd.EXIT_OK
     out = capsys.readouterr().out
-    assert "only/old: only in old report" in out
-    assert "only/new: only in new report" in out
+    assert "warning: only/old: skipped, only in old report" in out
+    assert "warning: only/new: skipped, only in new report" in out
 
 
 def test_invalid_inputs_exit_two(tmp_path, capsys):

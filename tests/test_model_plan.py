@@ -1,0 +1,300 @@
+"""Model-level serving plans (repro.tuning.model / model_tuner):
+cache round-trip, resolution precedence, backend isolation, corrupt
+degradation, schema tolerance, and the WCET-derives-from-plan claim
+the serve banner makes.
+
+Measured cases use a micro problem (2 layers, d_model 64) so a full
+tune is a handful of tiny prefill+decode passes.
+"""
+import json
+
+import pytest
+
+from repro import tuning
+from repro.tuning import (ModelProblem, PlanCache, default_model_plan,
+                          enumerate_model_candidates, measurement_count,
+                          model_cache_key, parse_model_problem,
+                          problem_config, resolve_model_plan,
+                          tune_model)
+from repro.tuning.model import (MODEL_NS, model_analytic_cost_s,
+                                model_feasible)
+from repro.tuning.plan_cache import env_fingerprint, env_sig
+
+MICRO = ModelProblem("qwen2-0.5b", 2, 32, 4, layers=2, d_model=64,
+                     vocab=256)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Fresh cache file + re-enabled autotuning + clean singleton."""
+    path = tmp_path / "plans.json"
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(path))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    tuning.reset()
+    yield path
+    tuning.reset()
+
+
+# --------------------------------------------------------- problem/sig
+
+def test_problem_sig_and_parse_round_trip():
+    assert MICRO.sig == "qwen2-0.5b-b2p32g4-l2d64v256-float32"
+    assert parse_model_problem("qwen2-0.5b", "2x32x4", d_model=64,
+                               vocab=256) == MICRO
+    full = ModelProblem("qwen2-0.5b", 4, 64, 8, layers=0)
+    assert "full" in full.sig
+    with pytest.raises(ValueError):
+        parse_model_problem("qwen2-0.5b", "2x32")
+
+
+def test_cache_key_uses_model_namespace():
+    key = model_cache_key(MICRO)
+    assert key.startswith(f"{MODEL_NS}|{MICRO.sig}|")
+    assert key.endswith(env_sig())
+
+
+# --------------------------------------------- candidates + cost model
+
+def test_candidates_include_default_and_divide_prompt(tmp_cache):
+    cfg = problem_config(MICRO)
+    cands = enumerate_model_candidates(cfg, MICRO)
+    assert default_model_plan(cfg, MICRO) in cands
+    for plan in cands:
+        assert MICRO.prompt_len % plan["chunk_q"] == 0
+        assert MICRO.prompt_len % plan["chunk_kv"] == 0
+        assert plan["decode_scan"] in (0, 1)
+        assert plan["mm_bm"] >= 1 and plan["mm_bn"] >= 1
+
+
+def test_feasibility_and_cost_respond_to_chunking(tmp_cache):
+    # long enough that an unchunked prefill working set (flash never
+    # materializes scores, so only the Q/K/V tiles count) overflows
+    # the 128 MiB VMEM budget
+    P = 262144
+    prob = ModelProblem("qwen2-0.5b", 8, P, 4, layers=2,
+                        d_model=128, vocab=512)
+    cfg = problem_config(prob)
+    base = default_model_plan(cfg, prob)
+    assert model_feasible(cfg, prob, base)
+    fat = dict(base, chunk_q=P, chunk_kv=P)
+    assert not model_feasible(cfg, prob, fat)
+    # more decode steps cost more; chunking only affects prefill
+    prob2 = ModelProblem("qwen2-0.5b", 8, P, 64, layers=2,
+                         d_model=128, vocab=512)
+    assert model_analytic_cost_s(cfg, prob2, base) \
+        > model_analytic_cost_s(cfg, prob, base)
+
+
+# ------------------------------------------------- cache + resolution
+
+def test_cache_round_trip_and_precedence(tmp_cache):
+    cfg = problem_config(MICRO)
+    default = default_model_plan(cfg, MICRO)
+
+    # defaults when cold
+    r = resolve_model_plan(cfg, MICRO)
+    assert r["source"] == "defaults" and r["plan"] == default
+
+    # cached plan wins over defaults
+    tuned = dict(default, chunk_q=16, decode_scan=1 - default["decode_scan"])
+    cache = tuning.active_cache()
+    cache.put(model_cache_key(MICRO), tuned, kernel="model")
+    cache.save()
+    tuning.reset()
+    r = resolve_model_plan(problem_config(MICRO), MICRO)
+    assert r["source"] == "cache" and r["plan"] == tuned
+
+    # explicit overrides win over the cache
+    r = resolve_model_plan(problem_config(MICRO), MICRO,
+                           {"chunk_q": 8, "chunk_kv": None})
+    assert r["plan"]["chunk_q"] == 8
+    assert r["plan"]["chunk_kv"] == tuned["chunk_kv"]
+    assert r["source"] == "explicit+cache"
+
+
+def test_autotune_disabled_ignores_cache(tmp_cache, monkeypatch):
+    cfg = problem_config(MICRO)
+    default = default_model_plan(cfg, MICRO)
+    cache = tuning.active_cache()
+    cache.put(model_cache_key(MICRO), dict(default, chunk_q=16),
+              kernel="model")
+    cache.save()
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    tuning.reset()
+    r = resolve_model_plan(cfg, MICRO)
+    assert r["source"] == "defaults" and r["plan"] == default
+
+
+def test_backend_keyed_isolation(tmp_cache):
+    """A plan tuned under a different backend fingerprint (e.g. a TPU
+    plan read on this CPU host) must not resolve."""
+    cfg = problem_config(MICRO)
+    default = default_model_plan(cfg, MICRO)
+    other_env = env_sig(dict(env_fingerprint(), backend="tpu"))
+    assert other_env != env_sig()
+    foreign_key = f"{MODEL_NS}|{MICRO.sig}|{other_env}"
+    cache = tuning.active_cache()
+    cache.put(foreign_key, dict(default, chunk_q=16), kernel="model")
+    cache.save()
+    tuning.reset()
+    r = resolve_model_plan(problem_config(MICRO), MICRO)
+    assert r["source"] == "defaults" and r["plan"] == default
+
+
+def test_corrupt_entry_degrades_to_defaults(tmp_cache):
+    cfg = problem_config(MICRO)
+    default = default_model_plan(cfg, MICRO)
+    cache = tuning.active_cache()
+    cache.put(model_cache_key(MICRO), dict(default, chunk_q=16),
+              kernel="model")
+    cache.save()
+    doc = json.loads(tmp_cache.read_text(encoding="utf-8"))
+    doc["plans"][model_cache_key(MICRO)]["plan"] = {"chunk_q": "wat"}
+    tmp_cache.write_text(json.dumps(doc), encoding="utf-8")
+    tuning.reset()
+    with pytest.warns(RuntimeWarning, match="mis-shaped"):
+        r = resolve_model_plan(problem_config(MICRO), MICRO)
+    assert r["source"] == "defaults" and r["plan"] == default
+
+
+def test_schema_v1_cache_still_read(tmp_cache):
+    """PR 10 bumped the cache schema to v2 (model| namespace); files
+    written by the v1 tuner must load without warnings."""
+    cfg = problem_config(MICRO)
+    default = default_model_plan(cfg, MICRO)
+    tuned = dict(default, chunk_q=16)
+    key = model_cache_key(MICRO)
+    doc = {"schema_version": 1,
+           "plans": {key: {"plan": tuned, "kernel": "model"}}}
+    tmp_cache.write_text(json.dumps(doc), encoding="utf-8")
+    tuning.reset()
+    r = resolve_model_plan(cfg, MICRO)
+    assert r["source"] == "cache" and r["plan"] == tuned
+
+
+# ------------------------------------------------------ tuning (slow-ish)
+
+def test_tune_model_cold_then_warm(tmp_cache):
+    from repro.obs import TraceRecorder
+    tr = TraceRecorder()
+    res = tune_model(MICRO, reps=2, warmup=1, max_candidates=2,
+                     trace=tr)
+    assert res.source == "measured"
+    assert res.measured > 0
+    assert measurement_count(tr) == res.measured
+    assert res.stats is not None and res.default_stats is not None
+    assert set(res.plan) == {"chunk_q", "chunk_kv", "decode_scan",
+                             "mm_bm", "mm_bn"}
+
+    # warm: same plan, zero measurements, zero spans
+    tr2 = TraceRecorder()
+    res2 = tune_model(MICRO, reps=2, trace=tr2)
+    assert res2.source == "cache"
+    assert res2.measured == 0 and measurement_count(tr2) == 0
+    assert res2.plan == res.plan
+
+    # and the serving resolution picks the tuned plan up
+    r = resolve_model_plan(problem_config(MICRO), MICRO)
+    assert r["source"] == "cache" and r["plan"] == res.plan
+
+
+def test_decode_scan_plans_are_equivalent(tmp_cache):
+    """scan-vs-unroll is a schedule choice, not a semantics choice:
+    both plans must produce identical serve outputs."""
+    import numpy as np
+
+    from repro.tuning.model_tuner import make_serve_runner
+
+    cfg = problem_config(MICRO)
+    base = default_model_plan(cfg, MICRO)
+
+    def run_decode(plan):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import lm as lm_mod
+        from repro.models.lm import RunOptions
+        opts = RunOptions(chunk_q=int(plan["chunk_q"]),
+                          chunk_kv=int(plan["chunk_kv"]),
+                          cache_len=MICRO.prompt_len + MICRO.gen,
+                          remat=False,
+                          decode_scan=bool(plan["decode_scan"]))
+        key = jax.random.PRNGKey(0)
+        params = lm_mod.init_params(cfg, key)
+        tokens = jax.random.randint(key, (MICRO.batch,
+                                          MICRO.prompt_len),
+                                    0, cfg.vocab_size)
+        batch = {"tokens": tokens, "targets": tokens}
+        logits, cache = lm_mod.prefill(cfg, params, batch, opts)
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+        toks = []
+        for i in range(MICRO.gen):
+            logits, cache = lm_mod.decode_step(
+                cfg, params, cache, tok, MICRO.prompt_len + i, opts)
+            tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+            toks.append(np.asarray(tok))
+        return np.stack(toks, 1), np.asarray(logits)
+
+    scan_toks, scan_logits = run_decode(dict(base, decode_scan=1))
+    unroll_toks, unroll_logits = run_decode(dict(base, decode_scan=0))
+    # greedy trajectories must match exactly; logits to bf16 accuracy
+    # (the model computes in bfloat16, and scan vs unroll reassociates
+    # the per-layer accumulation)
+    np.testing.assert_array_equal(scan_toks, unroll_toks)
+    np.testing.assert_allclose(scan_logits, unroll_logits, atol=3e-2)
+
+    # the AOT serve runner accepts both loop structures
+    make_serve_runner(cfg, MICRO, dict(base, decode_scan=0))()
+
+
+# -------------------------------------------------- WCET <- plan link
+
+def test_wcet_bound_derives_from_the_served_plan(tmp_cache):
+    """The serve banner's bound must be a function of the resolved
+    plan: same helper, different plan pins -> different bound."""
+    from repro.launch.serve import plan_wcet_s
+    from repro.models.lm import param_count
+
+    cfg = problem_config(MICRO)
+    n_p = param_count(cfg)
+    resolved = resolve_model_plan(cfg, MICRO)["plan"]
+    w_resolved = plan_wcet_s(cfg, resolved, MICRO.batch, n_p)
+    assert w_resolved > 0
+    # finer N tiling re-streams A once per extra column block, so the
+    # bound must move with the pins (the default pin is the full-N
+    # clamp ceiling — widening it would be clamped back to no-op)
+    repinned = dict(resolved, mm_bn=max(1, resolved["mm_bn"] // 2))
+    w_repinned = plan_wcet_s(cfg, repinned, MICRO.batch, n_p)
+    assert w_repinned != w_resolved
+
+    # and the schedule metadata records exactly the served tiles
+    from repro.core.tpu_mapping import serve_step_schedule
+    sched = serve_step_schedule(MICRO.batch, cfg.d_model, n_p,
+                                plan=resolved)
+    assert sched.meta["tile_m"] == min(resolved["mm_bm"], MICRO.batch)
+
+
+def test_committed_bench_report_has_tuned_serve_win():
+    """The acceptance artifact: the newest committed BENCH report must
+    show the tuned serving plan strictly faster than the default, with
+    CoV no worse than the bench_diff predictability slack."""
+    import pathlib
+
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    reports = []
+    for path in repo.glob("BENCH_*.json"):
+        doc = json.loads(path.read_text(encoding="utf-8"))
+        reports.append((float(doc.get("generated_at") or 0.0), doc))
+    assert reports, "no committed BENCH_*.json found"
+    newest = max(reports, key=lambda td: td[0])[1]
+    rows = {b["name"]: b for b in newest["benchmarks"]
+            if b["name"].startswith("serve/")}
+    assert rows, "newest BENCH report carries no serve_steps rows"
+    tuned = [n for n in rows if n.endswith("_tuned")]
+    assert tuned
+    for name in tuned:
+        t = rows[name]
+        d = rows[name.replace("_tuned", "_default")]
+        assert t["us_per_call"] < d["us_per_call"], (name, t, d)
+        assert t["jitter"]["cov"] <= d["jitter"]["cov"] + 0.02, \
+            (name, t["jitter"]["cov"], d["jitter"]["cov"])
